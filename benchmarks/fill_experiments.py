@@ -1,0 +1,30 @@
+"""Inject generated tables into EXPERIMENTS.md placeholders.
+
+    PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+import os
+import re
+
+from benchmarks.report import dryrun_table, load, roofline_table, sort_key
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+MD = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def inject(text: str, marker: str, content: str) -> str:
+    return text.replace(f"<!-- {marker} -->", content)
+
+
+def main():
+    rows = sorted(load("baseline"), key=sort_key)
+    with open(MD) as f:
+        text = f.read()
+    text = inject(text, "ROOFLINE_TABLE", roofline_table(rows, "16x16"))
+    text = inject(text, "DRYRUN_TABLE", dryrun_table(rows))
+    with open(MD, "w") as f:
+        f.write(text)
+    print("injected", len(rows), "rows into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(variant="baseline"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("variant", "baseline") != variant and "skipped" not in r:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_ms(s):
+    return f"{s*1e3:9.2f}"
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "bound | useful-flops | MFU@roofline | HBM GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP: {r['skipped']} | — | — | — |")
+            continue
+        if r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        hbm = r["memory"]["peak_hbm_estimate_per_dev"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(rf['compute_s'])} | "
+            f"{fmt_ms(rf['memory_s'])} | {fmt_ms(rf['collective_s'])} | "
+            f"{rf['bottleneck']} | {rf['useful_flops_ratio']:.2f} | "
+            f"{rf['mfu']:.3f} | {hbm:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | kind | compile s | HBM GiB/dev | "
+           "coll kinds (per-dev bytes, scanned-module) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            continue
+        kinds = r["roofline"].get("coll_by_kind", {})
+        ks = ";".join(f"{k}={v/2**20:.0f}MiB" for k, v in sorted(kinds.items())
+                      if k != "total")
+        hbm = r["memory"]["peak_hbm_estimate_per_dev"] / 2**30
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                   f"{r['kind']} | {r['compile_s']} | {hbm:.1f} | {ks} |")
+    return "\n".join(out)
+
+
+def sort_key(r):
+    return (r["arch"], SHAPE_ORDER.index(r["shape"])
+            if r["shape"] in SHAPE_ORDER else 9,
+            r.get("mesh", "z"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--section", default="roofline",
+                    choices=["roofline", "dryrun"])
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    rows = sorted(load(args.variant), key=sort_key)
+    if args.section == "roofline":
+        print(roofline_table(rows, args.mesh))
+    else:
+        print(dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

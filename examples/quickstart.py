@@ -1,0 +1,46 @@
+"""Quickstart: cascaded hybrid VFL (ZOO clients + FOO server) in ~40 lines.
+
+Four banks (clients) hold disjoint feature slices of each customer; the
+agency (server) holds the labels. Nothing but embeddings and scalar losses
+ever crosses the wire.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import VFLConfig
+from repro.configs.paper_mlp import PaperMLPConfig
+from repro.core import async_engine
+from repro.core.privacy import Ledger
+from repro.data import make_classification, vertical_partition
+from repro.models import common, tabular
+
+
+def main():
+    cfg = PaperMLPConfig(n_features=64, n_classes=10, n_clients=4,
+                         client_embed=32, server_embed=128)
+    X, y = make_classification(seed=0, n=2048, n_features=cfg.n_features,
+                               n_classes=cfg.n_classes)
+    x_parts = jnp.asarray(vertical_partition(X, cfg.n_clients))
+    params = common.materialize(tabular.param_specs(cfg), jax.random.key(0))
+
+    vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=0.05)
+    res = async_engine.run(
+        async_engine.EngineConfig(method="cascaded", steps=800,
+                                  batch_size=64),
+        vfl, params, x_parts, jnp.asarray(y))
+
+    acc = float(tabular.accuracy(res.params, x_parts, jnp.asarray(y)))
+    ledger = Ledger()
+    for _ in range(800):
+        ledger.log_round("cascaded", 64, cfg.client_embed)
+    print(f"final loss        : {res.losses[-25:].mean():.4f}")
+    print(f"train accuracy    : {acc:.3f}")
+    print(f"wire bytes total  : {ledger.total_bytes:,}")
+    print(f"gradients on wire : {ledger.transmits_gradients}")
+    assert acc > 0.9 and not ledger.transmits_gradients
+
+
+if __name__ == "__main__":
+    main()

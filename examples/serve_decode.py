@@ -1,0 +1,20 @@
+"""Serve a small model with batched requests across model families —
+KV-cache decode (granite MQA), SSM-state decode (rwkv6), hybrid decode
+(zamba2) and enc-dec decode (whisper).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import json
+
+from repro.launch.serve import serve
+
+
+def main():
+    for arch in ("granite-20b", "rwkv6-7b", "zamba2-2.7b", "whisper-medium"):
+        res = serve(arch, batch=4, prompt_len=12, gen_len=12,
+                    temperature=0.8)
+        print(json.dumps(res), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Checkpointing: flat-key npz + json manifest, sharding-aware restore.
+
+Arrays are gathered to host (fully-addressable) on save; on restore each
+leaf is device_put with the requested sharding (or left on default device).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(path: str, params, *, step: int = 0,
+                    metadata: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str, like, *, shardings: Optional[Any] = None):
+    """Restore into the structure of ``like`` (a params pytree or spec tree).
+    Returns (params, step)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_k, leaf in flat_like[0]:
+        key = _SEP.join(_path_str(p) for p in path_k)
+        arr = data[key]
+        leaves.append(arr)
+    params = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    if shardings is not None:
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), params, shardings)
+    else:
+        params = jax.tree.map(jax.numpy.asarray, params)
+    return params, manifest["step"]

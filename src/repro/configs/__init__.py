@@ -1,0 +1,80 @@
+"""Config registry: ``get_config(arch_id)`` / ``--arch`` selection."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+    VFLConfig,
+    reduced,
+)
+
+from repro.configs import (  # noqa: E402
+    deepseek_v3_671b,
+    granite_20b,
+    internlm2_20b,
+    internvl2_26b,
+    nemotron4_15b,
+    paper_mlp,
+    phi3_mini_3p8b,
+    qwen3_moe_30b_a3b,
+    rwkv6_7b,
+    whisper_medium,
+    zamba2_2p7b,
+)
+
+ARCH_REGISTRY: dict[str, ModelConfig] = {
+    m.CONFIG.arch_id: m.CONFIG
+    for m in (
+        internvl2_26b,
+        zamba2_2p7b,
+        qwen3_moe_30b_a3b,
+        deepseek_v3_671b,
+        internlm2_20b,
+        granite_20b,
+        rwkv6_7b,
+        whisper_medium,
+        phi3_mini_3p8b,
+        nemotron4_15b,
+    )
+}
+
+PAPER_MLP = paper_mlp.CONFIG
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCH_REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return ARCH_REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(list_archs())}"
+        ) from None
+
+
+def get_shape(name: str) -> ShapeConfig:
+    try:
+        return INPUT_SHAPES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown shape {name!r}; available: {', '.join(sorted(INPUT_SHAPES))}"
+        ) from None
+
+
+__all__ = [
+    "ARCH_REGISTRY",
+    "INPUT_SHAPES",
+    "ModelConfig",
+    "PAPER_MLP",
+    "ShapeConfig",
+    "TrainConfig",
+    "VFLConfig",
+    "get_config",
+    "get_shape",
+    "list_archs",
+    "reduced",
+]

@@ -1,0 +1,32 @@
+"""The paper's contribution: cascaded hybrid optimization for async VFL."""
+from repro.core.cascade import (
+    StepOutput,
+    make_cascaded_step,
+    make_foo_step,
+    make_full_zoo_step,
+    make_step_for_method,
+)
+from repro.core.partition import merge_params, split_params, tree_dim
+from repro.core.zoo import (
+    phi_factor,
+    perturb,
+    sample_direction,
+    two_point_grad,
+    zoo_gradient,
+)
+
+__all__ = [
+    "StepOutput",
+    "make_cascaded_step",
+    "make_foo_step",
+    "make_full_zoo_step",
+    "make_step_for_method",
+    "merge_params",
+    "split_params",
+    "tree_dim",
+    "phi_factor",
+    "perturb",
+    "sample_direction",
+    "two_point_grad",
+    "zoo_gradient",
+]

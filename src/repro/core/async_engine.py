@@ -1,0 +1,177 @@
+"""Asynchronous VFL engine (paper §III-C / Alg. 1) — host-level protocol
+simulation with exact staleness semantics, compiled as one ``lax.scan``.
+
+Per global round t (matching Fig. 2):
+  * client m_t is activated (schedule drawn from p_m, assumption IV.6)
+  * it picks a sample batch i_t, computes c/ĉ and "uploads" them
+  * the server evaluates h/ĥ against its *embedding table* — the latest
+    (stale, delay τ_{i,m}) embeddings of all other clients (assumption IV.7)
+  * the server does one local FOO step (ours/VAFL) or ZOO step (ZOO-VFL)
+  * the client does one ZOO step (ours/ZOO-VFL) or FOO step (VAFL)
+  * the table row (m_t, i_t) is refreshed; delay counters update per §III-C
+
+Synchronous baselines (Split-Learning, Syn-ZOO-VFL) activate *all* clients
+every round with fresh embeddings (no table staleness).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import VFLConfig
+from repro.core import zoo
+from repro.models import tabular
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    method: str = "cascaded"   # cascaded | vafl | zoo-vfl | split | syn-zoo
+    steps: int = 1000
+    batch_size: int = 64
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class EngineResult:
+    params: dict
+    losses: np.ndarray          # (T,)
+    max_delay_seen: int
+    mean_delay: float
+
+
+def make_schedule(key, steps: int, n_clients: int,
+                  probs: Optional[Tuple[float, ...]] = None):
+    """Activation sequence m_t — independent draws (assumption IV.6)."""
+    p = (jnp.ones(n_clients) / n_clients if probs is None
+         else jnp.asarray(probs))
+    return jax.random.choice(key, n_clients, (steps,), p=p)
+
+
+def run(cfg_engine: EngineConfig, vfl: VFLConfig, params, x_parts, y,
+        *, probs=None) -> EngineResult:
+    """x_parts: (M, n, f) vertically partitioned features; y: (n,) labels."""
+    M, n, f = x_parts.shape
+    T, bs = cfg_engine.steps, cfg_engine.batch_size
+    key = jax.random.key(cfg_engine.seed)
+    k_sched, k_idx, k_zoo = jax.random.split(key, 3)
+
+    schedule = make_schedule(k_sched, T, M, probs)
+    sample_idx = jax.random.randint(k_idx, (T, bs), 0, n)
+    zoo_keys = jax.random.split(k_zoo, T)
+
+    e = params["clients"]["b"].shape[-1]
+    # server-side table of latest client embeddings per sample (Fig. 2)
+    table0 = tabular.all_clients_forward(params["clients"],
+                                         x_parts)          # (M, n, e)
+    delays0 = jnp.zeros((M, n), jnp.int32)
+
+    sync = cfg_engine.method in ("split", "syn-zoo")
+    step_fn = _make_async_step(cfg_engine.method, vfl, x_parts, y) \
+        if not sync else _make_sync_step(cfg_engine.method, vfl, x_parts, y)
+
+    def body(carry, t_in):
+        params, table, delays = carry
+        m_t, idx, k = t_in
+        params, table, loss = step_fn(params, table, m_t, idx, k)
+        # delay bookkeeping (§III-C): activated (m,i) resets, others +1
+        delays = delays + 1
+        delays = delays.at[m_t, idx].set(0) if not sync else delays * 0
+        return (params, table, delays), (loss, jnp.max(delays))
+
+    (params, table, delays), (losses, maxd) = jax.lax.scan(
+        body, (params, table0, delays0), (schedule, sample_idx, zoo_keys))
+
+    return EngineResult(params=params, losses=np.asarray(losses),
+                        max_delay_seen=int(jnp.max(maxd)),
+                        mean_delay=float(jnp.mean(delays)))
+
+
+# ------------------------------------------------------------------------
+
+def _make_async_step(method: str, vfl: VFLConfig, x_parts, y):
+    """One asynchronous round for the activated client m_t."""
+
+    def server_loss_fn(server, c_batch, yb):
+        logits = tabular.server_forward(server, c_batch)
+        return tabular.xent(logits, yb)
+
+    def step(params, table, m_t, idx, key):
+        clients, server = params["clients"], params["server"]
+        client_m = jax.tree.map(lambda a: a[m_t], clients)
+        x_m = x_parts[m_t][idx]                          # (bs, f)
+        yb = y[idx]
+
+        # stale embeddings of all clients for this batch, fresh for m_t
+        c_stale = table[:, idx, :]                       # (M, bs, e)
+        c_fresh_m = tabular.client_forward(client_m, x_m)
+        c_batch = c_stale.at[m_t].set(c_fresh_m)
+
+        # ---- server update ------------------------------------------------
+        if method in ("cascaded", "vafl"):
+            h, g_server = jax.value_and_grad(server_loss_fn)(
+                server, jax.lax.stop_gradient(c_batch), yb)
+            server = jax.tree.map(
+                lambda w, g: w - vfl.lr_server * g, server, g_server)
+        else:  # zoo-vfl: server trains itself with ZOO too
+            def s_loss(s):
+                return server_loss_fn(s, c_batch, yb)
+            g_server, h, _ = zoo.zoo_gradient(
+                jax.random.fold_in(key, 1), s_loss, server, vfl.mu,
+                vfl.zoo_dist)
+            server = jax.tree.map(
+                lambda w, g: w - vfl.lr_server * g, server, g_server)
+
+        # ---- client update ------------------------------------------------
+        if method == "vafl":
+            # privacy-leaky: server sends ∂L/∂c_m; client backprops locally
+            def c_loss(cm):
+                cb = c_batch.at[m_t].set(tabular.client_forward(cm, x_m))
+                return server_loss_fn(server, cb, yb)
+            g_client = jax.grad(c_loss)(client_m)
+        else:
+            # ZOO (ours / zoo-vfl): only losses cross the wire
+            def c_loss(cm):
+                cb = c_batch.at[m_t].set(tabular.client_forward(cm, x_m))
+                return server_loss_fn(server, cb, yb)
+            g_client, _, _ = zoo.zoo_gradient(
+                jax.random.fold_in(key, 2), c_loss, client_m, vfl.mu,
+                vfl.zoo_dist, vfl.zoo_queries)
+        new_client_m = jax.tree.map(
+            lambda w, g: w - vfl.lr_client * g, client_m, g_client)
+        clients = jax.tree.map(
+            lambda all_, one: all_.at[m_t].set(one), clients, new_client_m)
+
+        # refresh the table with m_t's (pre-update) fresh embedding
+        table = table.at[m_t, idx].set(c_fresh_m)
+        return {"clients": clients, "server": server}, table, h
+
+    return step
+
+
+def _make_sync_step(method: str, vfl: VFLConfig, x_parts, y):
+    """Synchronous rounds: Split-Learning (FOO) / Syn-ZOO-VFL."""
+
+    def step(params, table, m_t, idx, key):
+        xb = x_parts[:, idx, :]                          # (M, bs, f)
+        yb = y[idx]
+        batch = {"x_parts": xb, "y": yb}
+
+        if method == "split":
+            (h, _), grads = jax.value_and_grad(
+                tabular.global_loss, has_aux=True)(params, batch)
+            params = jax.tree.map(
+                lambda w, g: w - vfl.lr_server * g, params, grads)
+        else:  # syn-zoo: every party (server + each client) does ZOO
+            def loss_of(p):
+                return tabular.global_loss(p, batch)[0]
+            grads, h, _ = zoo.zoo_gradient(key, loss_of, params, vfl.mu,
+                                           vfl.zoo_dist, vfl.zoo_queries)
+            params = jax.tree.map(
+                lambda w, g: w - vfl.lr_server * g, params, grads)
+        return params, table, h
+
+    return step

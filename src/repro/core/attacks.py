@@ -1,0 +1,122 @@
+"""Direct label-inference attack (paper §VI-B, Table I, after Fu et al.).
+
+Threat model: the server is a "model without split" — it *sums* the client
+outputs (one logit per class) and answers queries. A curious client crafts
+a query to recover ∂L/∂y^c; the true label is the class with negative sign.
+
+* FOO frameworks (Split-Learning / VAFL) transmit that partial derivative
+  verbatim → the attack succeeds with certainty.
+* ZOO frameworks reply only with two scalar losses (h, ĥ); the curious
+  client's best move is the one-query gradient *estimate*
+  φ(d)/μ (ĥ−h) u — a rank-one guess whose argmin is barely better than
+  chance. An eavesdropper never sees u at all (the client keeps it) and
+  must guess its own u' → chance level.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackResult:
+    curious_client_acc: float
+    eavesdropper_acc: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureAttackResult:
+    mse_with_model_access: float    # Luo et al.-style inversion (needs F_m)
+    mse_black_box: float            # our framework: F_m is a black box
+    mse_chance: float               # guess-the-mean floor
+
+
+def _sum_server_loss(c_sum, labels):
+    """The vulnerable server: logits = Σ_m c_m; per-sample CE loss."""
+    lse = jax.scipy.special.logsumexp(c_sum, axis=-1)
+    gold = jnp.take_along_axis(c_sum, labels[:, None], -1)[:, 0]
+    return lse - gold                                     # (B,)
+
+
+def grad_wrt_output(c_sum, labels):
+    """∂L/∂y — what a FOO server sends back (softmax − one-hot)."""
+    p = jax.nn.softmax(c_sum, axis=-1)
+    C = c_sum.shape[-1]
+    return p - jax.nn.one_hot(labels, C)
+
+
+def run_label_inference(key, n_classes: int, n_samples: int, mu: float = 1e-3,
+                        framework: str = "zoo") -> AttackResult:
+    """Simulate the attack over ``n_samples`` queries. Returns accuracies.
+
+    framework: "foo" (gradient on the wire) or "zoo" (losses only)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    labels = jax.random.randint(k1, (n_samples,), 0, n_classes)
+    # curious client's crafted query: random class-logit vector
+    c = jax.random.normal(k2, (n_samples, n_classes))
+    u = jax.random.normal(k3, (n_samples, n_classes))     # client's secret u
+    u_eaves = jax.random.normal(k4, (n_samples, n_classes))
+
+    if framework == "foo":
+        # the wire carries ∂L/∂y itself — both attacker roles read it
+        g = grad_wrt_output(c, labels)
+        pred_client = jnp.argmin(g, axis=-1)              # negative entry
+        pred_eaves = pred_client
+    else:
+        h = _sum_server_loss(c, labels)
+        h_hat = _sum_server_loss(c + mu * u, labels)
+        coef = (h_hat - h)[:, None] / mu                  # scalar per query
+        g_est = coef * u                                  # client knows u
+        pred_client = jnp.argmin(g_est, axis=-1)
+        # eavesdropper saw (c, ĉ, h, ĥ) but NOT u — guesses its own
+        g_eaves = coef * u_eaves
+        pred_eaves = jnp.argmin(g_eaves, axis=-1)
+
+    acc_c = float(jnp.mean((pred_client == labels).astype(jnp.float32)))
+    acc_e = float(jnp.mean((pred_eaves == labels).astype(jnp.float32)))
+    return AttackResult(curious_client_acc=acc_c, eavesdropper_acc=acc_e)
+
+
+def run_feature_inference(key, n: int = 512, f: int = 16, e: int = 32
+                          ) -> FeatureAttackResult:
+    """Feature-inference attack (paper §V-B, after Luo et al. [27]).
+
+    The server observes the client's embeddings c = relu(xW + b) and tries
+    to reconstruct the private features x.
+
+    * With MODEL ACCESS (the assumption of [27] — client model known, e.g.
+      a colluding party leaked it): invert the relu-affine map by solving
+      the least-squares system on the active units — reconstruction
+      succeeds (low MSE).
+    * BLACK BOX (our framework's protocol: F_m never leaves the client):
+      the embeddings carry no usable inverse — the best generic attacker
+      guess is the population mean (MSE ≈ feature variance).
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, f))
+    W = jax.random.normal(k2, (f, e)) / np.sqrt(f)
+    b = jax.random.normal(k3, (e,)) * 0.1
+    pre = x @ W + b
+    c = jax.nn.relu(pre)
+
+    # --- with model access: recover pre-activations on active units and
+    # solve x̂ = argmin ||x W - (c - b)||  restricted to active columns
+    active = c > 0
+    target = jnp.where(active, c - b, 0.0)
+
+    def invert_row(t_row, a_row):
+        Wa = W * a_row[None, :]                 # zero out inactive columns
+        sol, *_ = jnp.linalg.lstsq(Wa.T, t_row)
+        return sol
+    x_hat = jax.vmap(invert_row)(target, active.astype(jnp.float32))
+    mse_model = float(jnp.mean(jnp.square(x_hat - x)))
+
+    # --- black box: F_m unknown -> attacker predicts the mean
+    mse_bb = float(jnp.mean(jnp.square(jnp.mean(x, 0) - x)))
+    mse_chance = float(jnp.var(x))
+    return FeatureAttackResult(mse_with_model_access=mse_model,
+                               mse_black_box=mse_bb,
+                               mse_chance=mse_chance)

@@ -1,0 +1,191 @@
+"""The paper's contribution: cascaded hybrid optimization (Alg. 1).
+
+One SPMD train step =
+  1. client forward, clean + perturbed:  c = F_m(w_m;x),  ĉ = F_m(w_m+μu;x)
+  2. server losses  h = L(F_0(w_0, c), y),  ĥ = L(F_0(w_0, ĉ), y)
+     (only c/ĉ go up the wire, only h/ĥ come down — the privacy ledger in
+     ``repro.core.privacy`` accounts for exactly these)
+  3. client ZOO grad   ∇̂_{w_m} = φ(d_m)/μ (ĥ − h) u         (Eq. 3)
+  4. server FOO grad   ∇_{w_0} = ∂[L + λg(w_0)]/∂w_0          (Eq. 4, local
+     backprop — never transmitted)
+  5. SGD updates on both partitions.
+
+The server backward never differentiates through the client partition
+(stop_gradient on the boundary embeddings), exactly matching the protocol:
+the server cannot form ∂L/∂w_m because it does not know F_m.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VFLConfig
+from repro.core import zoo
+from repro.core.partition import merge_params, split_params
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StepOutput:
+    loss: jnp.ndarray
+    loss_perturbed: jnp.ndarray
+    grad_client_norm: jnp.ndarray
+    grad_server_norm: jnp.ndarray
+
+
+def _maybe_row_mask(cfg_vfl: VFLConfig, client, batch, vocab: int):
+    """Active-row perturbation mask tree for the embedding table."""
+    if not cfg_vfl.active_rows_only:
+        return None
+    mask_tree = jax.tree.map(
+        lambda w: jnp.ones((w.shape[0],), jnp.float32), client)
+    if "embed" in client and "tokens" in batch:
+        m = zoo.embedding_row_mask(batch["tokens"], vocab)
+        mask_tree = dict(mask_tree)
+        mask_tree["embed"] = {"table": m}
+    return mask_tree
+
+
+def make_cascaded_step(loss_fn: Callable, client_keys: Tuple[str, ...],
+                       vfl: VFLConfig, optimizer,
+                       vocab: int = 0) -> Callable:
+    """Build the jittable cascaded hybrid step.
+
+    loss_fn(params, batch) -> (loss, aux).  optimizer: repro.optim object
+    with ``init(params)`` / ``update(grads, state, params)``.
+    Returns step(params, opt_state, batch, key) -> (params, opt_state, StepOutput).
+    """
+
+    def step(params, opt_state, batch, key):
+        client, server = split_params(params, client_keys)
+        row_mask = _maybe_row_mask(vfl, client, batch, vocab)
+        keys = jax.random.split(key, vfl.zoo_queries)
+        us, d_effs = zip(*[zoo.sample_direction(k, client, vfl.zoo_dist,
+                                                row_mask) for k in keys])
+        phis = [zoo.phi_factor(vfl.zoo_dist, d) for d in d_effs]
+
+        if vfl.fused_dual:
+            # ---- §Perf fused path: ONE vmapped server pass over the
+            # stacked {clean, perturbed…} client params. The server weights
+            # are unbatched inside the vmap, so FSDP all-gathers them once
+            # instead of (1 + zoo_queries) times. Gradient flows from the
+            # clean lane only (zero cotangent on the perturbed lanes) —
+            # numerically identical to the unfused path.
+            stacked = jax.tree.map(
+                lambda c, *ps: jnp.stack([c] + list(ps)),
+                jax.lax.stop_gradient(client),
+                *[zoo.perturb(jax.lax.stop_gradient(client), u, vfl.mu)
+                  for u in us])
+
+            def server_loss(server_p):
+                losses = jax.vmap(
+                    lambda c: loss_fn(merge_params(c, server_p), batch)[0]
+                )(stacked)
+                return losses[0], losses
+
+            (loss_clean, losses), g_server = jax.value_and_grad(
+                server_loss, has_aux=True)(server)
+            lps = [losses[1 + i] for i in range(vfl.zoo_queries)]
+        else:
+            # ---- server FOO (Eq. 4): exact backprop on w_0 only ---------
+            def server_loss(server_p):
+                loss, _ = loss_fn(
+                    merge_params(jax.lax.stop_gradient(client), server_p),
+                    batch)
+                return loss
+
+            loss_clean, g_server = jax.value_and_grad(server_loss)(server)
+            lps = [loss_fn(merge_params(zoo.perturb(client, u, vfl.mu),
+                                        server), batch)[0]
+                   for u in us]
+
+        # ---- client ZOO (Eq. 2/3) ---------------------------------------
+        gs = [zoo.two_point_grad(u, lp, loss_clean, vfl.mu, phi)
+              for u, lp, phi in zip(us, lps, phis)]
+        g_client = jax.tree.map(lambda *x: sum(x) / float(len(x)), *gs)
+        loss_pert = lps[0]
+
+        # ---- updates (separate lrs per party, paper §VI-A-d) -------------
+        grads = merge_params(
+            jax.tree.map(lambda g: g * (vfl.lr_client / vfl.lr_server),
+                         g_client),
+            g_server)
+        new_params, new_opt_state = optimizer.update(grads, opt_state, params)
+
+        out = StepOutput(
+            loss=loss_clean, loss_perturbed=loss_pert,
+            grad_client_norm=_norm(g_client), grad_server_norm=_norm(g_server))
+        return new_params, new_opt_state, out
+
+    return step
+
+
+def make_step_for_method(method: str, loss_fn, client_keys, vfl: VFLConfig,
+                         optimizer, vocab: int = 0):
+    """Factory covering the paper's five frameworks at step granularity.
+
+    cascaded      : ZOO client + FOO server   (ours)
+    vafl / split  : FOO client + FOO server   (privacy-leaky upper bound)
+    zoo-vfl / syn-zoo-vfl : ZOO client + ZOO server
+    (sync-vs-async semantics live in repro.core.async_engine)."""
+    if method in ("cascaded", "ours"):
+        return make_cascaded_step(loss_fn, client_keys, vfl, optimizer, vocab)
+    if method in ("vafl", "split-learning", "foo"):
+        return make_foo_step(loss_fn, optimizer)
+    if method in ("zoo-vfl", "syn-zoo-vfl", "zoo"):
+        return make_full_zoo_step(loss_fn, client_keys, vfl, optimizer, vocab)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def make_foo_step(loss_fn, optimizer):
+    """First-order step on all parties (Split-Learning / VAFL)."""
+    def step(params, opt_state, batch, key):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                     batch)
+        new_params, new_opt_state = optimizer.update(grads, opt_state, params)
+        out = StepOutput(loss=loss, loss_perturbed=loss,
+                         grad_client_norm=_norm(grads),
+                         grad_server_norm=_norm(grads))
+        return new_params, new_opt_state, out
+    return step
+
+
+def make_full_zoo_step(loss_fn, client_keys, vfl: VFLConfig, optimizer,
+                       vocab: int = 0):
+    """ZOO on both partitions (ZOO-VFL baseline [42]): the server also
+    estimates its gradient with a two-point query on its own parameters."""
+    def step(params, opt_state, batch, key):
+        client, server = split_params(params, client_keys)
+        k_c, k_s = jax.random.split(key)
+
+        def loss_of_client(c):
+            return loss_fn(merge_params(c, server), batch)[0]
+
+        def loss_of_server(s):
+            return loss_fn(merge_params(client, s), batch)[0]
+
+        g_client, loss_clean, _ = zoo.zoo_gradient(
+            k_c, loss_of_client, client, vfl.mu, vfl.zoo_dist,
+            vfl.zoo_queries)
+        g_server, _, _ = zoo.zoo_gradient(
+            k_s, loss_of_server, server, vfl.mu, vfl.zoo_dist,
+            vfl.zoo_queries)
+
+        grads = merge_params(
+            jax.tree.map(lambda g: g * (vfl.lr_client / vfl.lr_server),
+                         g_client),
+            g_server)
+        new_params, new_opt_state = optimizer.update(grads, opt_state, params)
+        out = StepOutput(loss=loss_clean, loss_perturbed=loss_clean,
+                         grad_client_norm=_norm(g_client),
+                         grad_server_norm=_norm(g_server))
+        return new_params, new_opt_state, out
+    return step
+
+
+def _norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))

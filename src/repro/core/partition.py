@@ -1,0 +1,38 @@
+"""Party-plane parameter partition.
+
+The cascade's party boundary is a functional split of the parameter pytree:
+``client`` subtree(s) are updated with ZOO, the ``server`` subtree with FOO.
+For the LM-scale configs the client holds the embedding (+ modality
+projector); for the paper's tabular experiments the clients are a stacked
+(M, ...) pytree of per-client feature extractors.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def split_params(params: Dict, client_keys: Tuple[str, ...]) -> Tuple[Dict, Dict]:
+    client = {k: v for k, v in params.items() if k in client_keys}
+    server = {k: v for k, v in params.items() if k not in client_keys}
+    return client, server
+
+
+def merge_params(client: Dict, server: Dict) -> Dict:
+    out = dict(server)
+    out.update(client)
+    return out
+
+
+def tree_dim(tree) -> int:
+    """Total parameter dimension d of a partition (ZOO's d_m)."""
+    return int(sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree)))
+
+
+def tree_flat_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)

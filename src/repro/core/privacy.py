@@ -1,0 +1,69 @@
+"""Communication & privacy ledger.
+
+Static, per-round accounting of *what crosses the wire* under each
+framework — the paper's security argument (§V) is structural: ZOO modes
+transmit embeddings up and scalar losses down, never gradients or model
+internals. The ledger makes that checkable in tests and reportable in
+benchmarks (per-round bytes for the communication-efficiency comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+GRADIENT_KINDS = frozenset({"partial_derivative", "gradient", "jacobian"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Message:
+    sender: str        # "client" | "server"
+    kind: str          # "embedding" | "loss" | "partial_derivative"
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+
+def round_messages(method: str, batch: int, embed: int) -> List[Message]:
+    """Wire contents of ONE asynchronous round (one activated client)."""
+    up_clean = Message("client", "embedding", (batch, embed))
+    if method in ("cascaded", "zoo-vfl", "syn-zoo-vfl"):
+        return [
+            up_clean,
+            Message("client", "embedding", (batch, embed)),   # ĉ (perturbed)
+            Message("server", "loss", (batch,)),              # h
+            Message("server", "loss", (batch,)),              # ĥ
+        ]
+    if method in ("vafl", "split-learning", "split"):
+        return [
+            up_clean,
+            Message("server", "partial_derivative", (batch, embed)),  # ∂L/∂c
+        ]
+    raise ValueError(method)
+
+
+@dataclasses.dataclass
+class Ledger:
+    messages: List[Message] = dataclasses.field(default_factory=list)
+
+    def log_round(self, method: str, batch: int, embed: int):
+        self.messages.extend(round_messages(method, batch, embed))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(m.nbytes for m in self.messages)
+
+    @property
+    def transmits_gradients(self) -> bool:
+        """True iff any internal information leaves a party (§V violated)."""
+        return any(m.kind in GRADIENT_KINDS for m in self.messages)
+
+    def bytes_by_kind(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for m in self.messages:
+            out[m.kind] = out.get(m.kind, 0) + m.nbytes
+        return out

@@ -1,0 +1,104 @@
+"""Zeroth-order optimization primitives (paper §III-B-1, Eq. 2/3).
+
+Two-point stochastic gradient estimator over a parameter pytree:
+
+    ∇̂ f = φ(d)/μ · [f(w + μu) − f(w)] · u,     u ~ p
+
+* p = N(0, I)                    → φ(d) = 1
+* p = U(S(0,1)) unit sphere      → φ(d) = d
+
+Beyond-paper extensions:
+* ``n_queries`` q-point averaging (variance ∝ 1/q),
+* ``active_rows`` — perturb only embedding rows touched by the batch,
+  shrinking the effective ZOO dimension from vocab·d to uniq_tokens·d
+  (the paper's Thm IV.8 bounds convergence by d_client; this drops d_client
+  by orders of magnitude for LM clients).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import tree_dim
+
+
+def phi_factor(dist: str, d) -> jnp.ndarray:
+    if dist == "normal":
+        return jnp.float32(1.0)
+    if dist == "sphere":
+        return jnp.asarray(d, jnp.float32)
+    raise ValueError(f"unknown ZOO distribution {dist!r}")
+
+
+def sample_direction(key, tree, dist: str = "sphere",
+                     row_mask: Optional[dict] = None):
+    """Draw u ~ p matching ``tree``'s structure.
+
+    row_mask: optional pytree *matching tree's structure*, each leaf a
+    (rows,) 0/1 mask applied to the leaf's first axis (use all-ones for
+    leaves that are not row-restricted). Returns (u_tree, effective_dim)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    us = [jax.random.normal(k, x.shape, jnp.float32)
+          for k, x in zip(keys, leaves)]
+    u = jax.tree.unflatten(treedef, us)
+
+    if row_mask is not None:
+        u = jax.tree.map(
+            lambda uu, m: uu * m.reshape((-1,) + (1,) * (uu.ndim - 1)),
+            u, row_mask)
+        d_eff = sum(
+            jnp.sum(m) * (uu.size // uu.shape[0])
+            for uu, m in zip(jax.tree.leaves(u), jax.tree.leaves(row_mask)))
+    else:
+        d_eff = jnp.float32(tree_dim(tree))
+
+    if dist == "sphere":
+        sq = sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(u))
+        inv = jax.lax.rsqrt(jnp.maximum(sq, 1e-30))
+        u = jax.tree.map(lambda x: x * inv, u)
+    return u, d_eff
+
+
+def perturb(tree, u, mu: float):
+    return jax.tree.map(
+        lambda w, uu: (w.astype(jnp.float32) + mu * uu).astype(w.dtype),
+        tree, u)
+
+
+def two_point_grad(u, h_hat, h, mu: float, phi) -> dict:
+    """Eq. 3: ∇̂ = φ/μ (ĥ − h) u — built client-side from the two losses."""
+    coef = (phi / mu) * (h_hat - h)
+    return jax.tree.map(lambda uu: coef * uu, u)
+
+
+def zoo_gradient(key, loss_fn, tree, mu: float, dist: str = "sphere",
+                 n_queries: int = 1, row_mask=None):
+    """Full ZOO gradient of ``loss_fn(tree)`` with q-point averaging.
+
+    Returns (grad_tree, loss_clean, aux). loss_fn must return a scalar
+    (or (scalar, aux))."""
+    def eval_loss(t):
+        out = loss_fn(t)
+        return out if isinstance(out, tuple) else (out, None)
+
+    loss_clean, aux = eval_loss(tree)
+
+    def one_query(k):
+        u, d_eff = sample_direction(k, tree, dist, row_mask)
+        phi = phi_factor(dist, d_eff)
+        loss_pert, _ = eval_loss(perturb(tree, u, mu))
+        return two_point_grad(u, loss_pert, loss_clean, mu, phi)
+
+    keys = jax.random.split(key, n_queries)
+    grads = [one_query(k) for k in keys]
+    grad = jax.tree.map(lambda *gs: sum(gs) / float(n_queries), *grads)
+    return grad, loss_clean, aux
+
+
+def embedding_row_mask(tokens, vocab: int):
+    """0/1 mask of vocabulary rows present in the batch (active-row mode)."""
+    mask = jnp.zeros((vocab,), jnp.float32)
+    return mask.at[tokens.reshape(-1)].set(1.0)

@@ -1,0 +1,34 @@
+"""Sharding-aware batch feeding."""
+from __future__ import annotations
+
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class BatchIterator:
+    """Wraps a numpy batch iterator; device_puts each batch with the given
+    shardings (global arrays under a mesh, single-device otherwise)."""
+
+    def __init__(self, it: Iterator[dict], shardings: Optional[dict] = None):
+        self._it = it
+        self._shardings = shardings
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        batch = next(self._it)
+        if self._shardings is None:
+            return jax.tree.map(jax.numpy.asarray, batch)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(np.asarray(x), s),
+            batch, self._shardings)
+
+
+def epoch_minibatches(rng: np.random.Generator, n: int, batch_size: int):
+    """Shuffled index minibatches covering one epoch."""
+    idx = rng.permutation(n)
+    for s in range(0, n - batch_size + 1, batch_size):
+        yield idx[s:s + batch_size]

@@ -1,0 +1,119 @@
+"""Causal (+ sliding-window) flash attention — the server backbone hotspot.
+
+Online-softmax tiling adapted to TPU: the grid walks (batch·heads, q-blocks,
+kv-blocks); the kv dimension is the *innermost* grid axis so the running
+max/denominator/accumulator persist in VMEM scratch across kv steps
+(TPU grids execute sequentially over the trailing axis — this replaces the
+CUDA pattern of an in-kernel loop with shared-memory tiles; see DESIGN.md
+hardware-adaptation notes). Block shapes are MXU-aligned (128 multiples).
+
+Causal + window masking is applied per tile; fully-masked kv tiles are
+skipped via ``pl.when`` so the causal kernel does ~half the work and a
+window kernel touches only O(W) keys per query row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # tile-level skip: entirely above the diagonal / outside the window
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (k_start <= q_start + bq - 1)
+    if window > 0:
+        live = live & (k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                             # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_scr[...] + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q,k,v: (BH, S, d) — batch and heads pre-flattened (GQA callers
+    broadcast kv heads first). Returns (BH, S, d)."""
+    BH, S, d = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, Skv)
+    assert S % bq == 0 and Skv % bk == 0
+    n_kv = Skv // bk
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv=n_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            _scratch((bq, 1)),
+            _scratch((bq, 1)),
+            _scratch((bq, d)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,13 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128):
+    """Flash attention over (BH, S, d) tensors (heads pre-flattened)."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+        interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention (materialized scores)."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: (BH, S, d) -> (BH, S, d)."""
+    BH, S, d = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

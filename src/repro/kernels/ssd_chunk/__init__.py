@@ -1,0 +1,3 @@
+from repro.kernels.ssd_chunk.ops import ssd_chunk
+
+__all__ = ["ssd_chunk"]

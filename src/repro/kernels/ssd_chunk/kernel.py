@@ -1,0 +1,88 @@
+"""Mamba2 SSD chunked scan — the hybrid/SSM train-time hotspot.
+
+Per (batch·head) the recurrence  S_t = a_t·S_{t-1} + dt_t·(x_t ⊗ B_t),
+y_t = S_t·C_t  is evaluated chunk-by-chunk: within a chunk the
+contribution is a (c×c) masked attention-like matrix (MXU matmuls); across
+chunks only the (P×N) state is carried. TPU adaptation: the chunk index is
+the TRAILING grid axis (sequential on TPU), so the state lives in VMEM
+scratch across grid steps — the CUDA version's cross-block shared-memory
+handoff becomes a scratch-carry, and all (c,c)/(c,N)/(P,N) tiles are
+MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, dt_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (c, P)
+    a = a_ref[0].astype(jnp.float32)          # (c, 1)
+    dt = dt_ref[0].astype(jnp.float32)        # (c, 1)
+    bm = b_ref[0].astype(jnp.float32)         # (c, N)
+    cm = c_ref[0].astype(jnp.float32)         # (c, N)
+
+    la = jnp.log(jnp.maximum(a, 1e-20))
+    cum = jnp.cumsum(la, axis=0)              # (c, 1)
+
+    # intra-chunk: M[i,j] = exp(cum_i - cum_j)·dt_j·(C_i·B_j), j<=i
+    seg = cum - cum.T                          # (c, c)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = jj <= ii
+    seg = jnp.where(mask, seg, 0.0)
+    dec = jnp.where(mask, jnp.exp(seg), 0.0)
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)   # (c, c)
+    m = dec * cb * dt.T
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32)        # (c, P)
+
+    # inter-chunk: y += exp(cum_i)·(C_i @ S_prev^T);  S (P, N)
+    state = state_scr[...]
+    y = y + jnp.exp(cum) * jnp.dot(cm, state.T,
+                                   preferred_element_type=jnp.float32)
+
+    # state update: S' = a_tot·S + Σ_j exp(cum_last - cum_j)·dt_j·x_j⊗B_j
+    w = jnp.exp(cum[-1:] - cum) * dt                              # (c, 1)
+    ds = jnp.dot((x * w).T, bm, preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(cum[-1]) + ds
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_pallas(xh, a, dt, bm, cm, *, chunk: int = 128,
+                     interpret: bool = False):
+    """xh (BH, S, P); a/dt (BH, S); bm/cm (BH, S, N) -> y (BH, S, P)."""
+    BH, S, P = xh.shape
+    N = bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), xh.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, a[..., None], dt[..., None], bm, cm)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: the naive per-token SSD recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(xh, a, dt, bm, cm):
+    """xh (BH,S,P); a/dt (BH,S); bm/cm (BH,S,N) -> (BH,S,P)."""
+    BH, S, P = xh.shape
+    N = bm.shape[-1]
+
+    def step(state, t):
+        x_t, a_t, dt_t, b_t, c_t = t
+        state = (state * a_t[:, None, None]
+                 + jnp.einsum("bp,bn,b->bpn", x_t, b_t, dt_t))
+        return state, jnp.einsum("bpn,bn->bp", state, c_t)
+
+    s0 = jnp.zeros((BH, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, s0,
+        (xh.transpose(1, 0, 2).astype(jnp.float32),
+         a.T.astype(jnp.float32), dt.T.astype(jnp.float32),
+         bm.transpose(1, 0, 2).astype(jnp.float32),
+         cm.transpose(1, 0, 2).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2).astype(xh.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.zoo_dual_matmul.ops import zoo_dual_matmul
+
+__all__ = ["zoo_dual_matmul"]

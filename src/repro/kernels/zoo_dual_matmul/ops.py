@@ -1,0 +1,16 @@
+"""Public wrapper: pallas on TPU, interpret-mode pallas elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.zoo_dual_matmul.kernel import zoo_dual_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def zoo_dual_matmul(x, w, u, mu, *, bm: int = 128, bn: int = 128):
+    """y = x @ w ; y_hat = x @ (w + mu*u) — one fused pass."""
+    return zoo_dual_matmul_pallas(x, w, u, mu, bm=bm, bn=bn,
+                                  interpret=not _on_tpu())

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused dual matmul."""
+import jax.numpy as jnp
+
+
+def zoo_dual_matmul_ref(x, w, u, mu):
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    y_hat = jnp.dot(x.astype(jnp.float32),
+                    w.astype(jnp.float32) + mu * u.astype(jnp.float32))
+    return y.astype(x.dtype), y_hat.astype(x.dtype)

@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination with 512 placeholder host devices, and extract the roofline
+terms from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b \
+        --shape train_4k [--multi-pod] [--method cascaded]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--both-meshes]
+
+The VERY FIRST lines above set XLA_FLAGS before any jax import — jax locks
+the device count at first init.  Never import this module from code that
+needs the real device topology.
+"""
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (INPUT_SHAPES, TrainConfig, VFLConfig, get_config,  # noqa: E402
+                           get_shape, list_archs)
+from repro.core.cascade import make_cascaded_step  # noqa: E402
+from repro.launch import costmodel  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.models import common  # noqa: E402
+from repro.models.model_api import (LONG_WINDOW, abstract_inputs,  # noqa: E402
+                                    build_cache_specs, build_input_specs,
+                                    build_model)
+from repro.optim import sgd  # noqa: E402
+from repro.sharding.rules import (ACT_RULES, PARAM_RULES,  # noqa: E402
+                                  PARAM_RULES_NO_FSDP)
+from repro.sharding import rules as shrules  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _specs_shardings(spec_tree, mesh, rules):
+    return common.shardings(spec_tree, mesh, rules)
+
+
+def _replicated(mesh):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+def skip_reason(cfg, shape) -> str:
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return "enc-dec arch: 500k-token decode not meaningful (DESIGN.md)"
+    return ""
+
+
+@dataclasses.dataclass
+class Variant:
+    """Hillclimb switches (§Perf). Defaults = paper-faithful baseline."""
+    name: str = "baseline"
+    window_gather: bool = False     # gathered sliding-window decode read
+    gather_experts: bool = False    # tiny-batch MoE expert weight gather
+    remat: bool = True              # activation checkpointing in train
+    zoo_queries: int = 1
+    iota_embed: bool = False        # one-hot-matmul embedding lookup
+    rs_outputs: bool = False        # reduce-scatter TP output projections
+    mla_absorb: bool = False        # latent-space MLA decode
+    no_fsdp: bool = False           # TP/EP only: no weight gathers
+    fused_dual: bool = False        # one vmapped clean+perturbed pass
+    remat_policy: str = "full"      # full | dots
+    capacity_factor: float = 0.0    # >0 overrides the MoE capacity factor
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            variant: Variant = Variant(), verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+
+    window = 0
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        # attention archs need sub-quadratic attention at 500k: SWA variant
+        window = LONG_WINDOW
+    if variant.remat is False:
+        cfg = dataclasses.replace(cfg, remat=False)
+    if shape.is_decode:
+        cfg = dataclasses.replace(cfg, remat=False)   # no backward pass
+    if variant.iota_embed or variant.rs_outputs or variant.mla_absorb:
+        cfg = dataclasses.replace(cfg, iota_embed=variant.iota_embed,
+                                  rs_outputs=variant.rs_outputs,
+                                  mla_absorb=variant.mla_absorb)
+    if variant.remat_policy != "full":
+        cfg = dataclasses.replace(cfg, remat_policy=variant.remat_policy)
+    if variant.capacity_factor:
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=variant.capacity_factor)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    model = build_model(cfg, max_seq=shape.seq_len, window=window,
+                        window_gather=variant.window_gather,
+                        gather_experts=variant.gather_experts)
+
+    param_rules = PARAM_RULES_NO_FSDP if variant.no_fsdp else PARAM_RULES
+    params_abs = common.abstract(model.param_specs)
+    params_sh = _specs_shardings(model.param_specs, mesh, param_rules)
+
+    data_specs = build_input_specs(cfg, shape)
+    data_abs = common.abstract(data_specs)
+    data_sh = _specs_shardings(data_specs, mesh, ACT_RULES)
+
+    t0 = time.time()
+    backward = shape.kind == "train"
+
+    with mesh:
+        if shape.kind == "train":
+            vfl = VFLConfig(zoo_queries=variant.zoo_queries,
+                            fused_dual=variant.fused_dual)
+            opt = sgd(0.01)
+            step = make_cascaded_step(model.loss_fn, model.client_keys, vfl,
+                                      opt, vocab=cfg.padded_vocab)
+            opt_state_abs = {"step": jax.ShapeDtypeStruct((), jnp.int32)}
+            key_abs = jax.eval_shape(lambda: jax.random.key(0))
+            lowered = jax.jit(
+                step,
+                in_shardings=(params_sh, _replicated(mesh), data_sh,
+                              _replicated(mesh)),
+            ).lower(params_abs, opt_state_abs, data_abs, key_abs)
+        elif shape.kind == "prefill":
+            lowered = jax.jit(
+                model.forward_fn,
+                in_shardings=(params_sh, data_sh),
+            ).lower(params_abs, data_abs)
+        else:  # decode
+            cache_specs = build_cache_specs(cfg, shape.global_batch,
+                                            shape.seq_len)
+            cache_abs = common.abstract(cache_specs)
+            cache_sh = _specs_shardings(cache_specs, mesh, ACT_RULES)
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(
+                model.decode_fn,
+                in_shardings=(params_sh, data_sh, cache_sh,
+                              _replicated(mesh)),
+            ).lower(params_abs, data_abs, cache_abs, pos_abs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    raw = rl.analyze(compiled, compiled.as_text(), cfg, shape, n_dev,
+                     backward=backward)
+    # trip-count-corrected costs from unrolled probes (scan bodies are
+    # counted once by cost_analysis — see launch/costmodel.py)
+    corr = costmodel.corrected_costs(
+        cfg, shape, mesh, window=window,
+        window_gather=variant.window_gather,
+        gather_experts=variant.gather_experts,
+        zoo_queries=variant.zoo_queries,
+        param_rules=param_rules, fused_dual=variant.fused_dual)
+    roof = rl.Roofline(
+        flops=corr["flops"], bytes_accessed=corr["bytes"],
+        coll_bytes=corr["coll_bytes"], coll_by_kind=raw.coll_by_kind,
+        n_devices=n_dev,
+        model_flops=rl.model_flops_for(cfg, shape, backward=backward))
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant.name,
+        "window": window,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "peak_hbm_estimate_per_dev": (mem.argument_size_in_bytes
+                                          + mem.output_size_in_bytes
+                                          + mem.temp_size_in_bytes),
+        },
+        "roofline": roof.as_dict(),
+        "roofline_raw_scanned": raw.as_dict(),
+        "cost_segments": corr.get("per_segment"),
+    }
+    if verbose:
+        r = result["roofline"]
+        hbm_gb = result["memory"]["peak_hbm_estimate_per_dev"] / 2**30
+        print(f"[dryrun] {arch:22s} {shape_name:12s} "
+              f"{result['mesh']:8s} {variant.name:14s} "
+              f"compute={r['compute_s']*1e3:9.3f}ms "
+              f"memory={r['memory_s']*1e3:9.3f}ms "
+              f"coll={r['collective_s']*1e3:9.3f}ms "
+              f"bound={r['bottleneck']:10s} hbm={hbm_gb:6.2f}GiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+              flush=True)
+    return result
+
+
+def save_result(res: dict, out_dir: str = OUT_DIR):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{res['arch']}_{res['shape']}_{res.get('mesh','skip')}" \
+           f"_{res.get('variant','baseline')}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(res, f, indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--window-gather", action="store_true")
+    ap.add_argument("--gather-experts", action="store_true")
+    ap.add_argument("--iota-embed", action="store_true")
+    ap.add_argument("--rs-outputs", action="store_true")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--fused-dual", action="store_true")
+    ap.add_argument("--remat-policy", default="full")
+    ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--variant-name", default=None)
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    any_opt = (args.window_gather or args.gather_experts or args.iota_embed
+               or args.rs_outputs or args.mla_absorb or args.no_fsdp
+               or args.fused_dual or args.remat_policy != "full"
+               or args.capacity_factor)
+    variant = Variant(
+        name=args.variant_name or ("baseline" if not any_opt else "opt"),
+        window_gather=args.window_gather,
+        gather_experts=args.gather_experts,
+        iota_embed=args.iota_embed,
+        rs_outputs=args.rs_outputs,
+        mla_absorb=args.mla_absorb,
+        no_fsdp=args.no_fsdp,
+        fused_dual=args.fused_dual,
+        remat_policy=args.remat_policy,
+        capacity_factor=args.capacity_factor)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    res = run_one(arch, shape, multi_pod=mp, variant=variant)
+                    save_result(res, args.out)
+                    if "skipped" in res:
+                        print(f"[dryrun] {arch:22s} {shape:12s} SKIP: "
+                              f"{res['skipped']}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+TPU v5e targets (per chip):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s per link
+
+``compiled.cost_analysis()`` describes the per-device SPMD module, so all
+three terms are computed per-device:
+
+    compute_s    = HLO_flops_per_dev / PEAK_FLOPS
+    memory_s     = HLO_bytes_per_dev / HBM_BW
+    collective_s = collective_bytes_per_dev / ICI_BW
+
+collective bytes are parsed from the compiled HLO text
+(``repro.utils.hlo``) since cost_analysis does not report them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.utils.hlo import collective_bytes
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+# The CPU backend used for the dry-run legalizes bf16 -> f32 before
+# partitioning, so every large tensor's bytes (HBM traffic and collective
+# operands) are reported at 2x their TPU size. All large tensors in our
+# models are bf16 (fp32 appears only in norm scales / scalars), so we apply
+# a uniform 0.5 correction to byte counts. Raw numbers are preserved in the
+# dry-run JSONs under roofline_raw_scanned.
+BF16_LEGALIZATION_CORRECTION = 0.5
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                   # per-device HLO flops
+    bytes_accessed: float          # per-device HLO bytes
+    coll_bytes: float              # per-device collective bytes
+    coll_by_kind: Dict[str, int]
+    n_devices: int
+    model_flops: float             # analytic 6·N·D (or 2·N·D inference)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return (self.bytes_accessed * BF16_LEGALIZATION_CORRECTION) / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return (self.coll_bytes * BF16_LEGALIZATION_CORRECTION) / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline lower bound on step latency (no overlap assumed worst
+        term dominates; perfect overlap = max of the three)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO flops — catches remat/dispatch waste."""
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilisation at the roofline bound."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.n_devices * PEAK_FLOPS)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "bytes_per_dev": self.bytes_accessed,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_by_kind": dict(self.coll_by_kind),
+            "n_devices": self.n_devices,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+        }
+
+
+def model_flops_for(cfg, shape, *, backward: bool) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·tokens (train) / 2·N_active·tokens
+    (inference); decode processes 1 token per sequence."""
+    n_active = cfg.active_param_count()
+    if shape.is_decode:
+        tokens = shape.global_batch
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if backward else 2.0
+    return mult * n_active * tokens
+
+
+def analyze(compiled, lowered_text: Optional[str], cfg, shape, n_devices: int,
+            *, backward: bool) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):                # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    text = lowered_text or compiled.as_text()
+    coll = collective_bytes(text)
+    return Roofline(
+        flops=flops, bytes_accessed=nbytes,
+        coll_bytes=float(coll.get("total", 0)), coll_by_kind=coll,
+        n_devices=n_devices,
+        model_flops=model_flops_for(cfg, shape, backward=backward))

@@ -1,0 +1,105 @@
+"""Parameter machinery: abstract param specs, init, sharding trees.
+
+The framework is pure functional JAX (no flax): a model is described by a
+pytree of :class:`ParamSpec` leaves. The same spec tree serves three uses:
+
+* ``abstract(tree)``       -> ShapeDtypeStruct tree (dry-run, no allocation)
+* ``materialize(tree, k)`` -> concrete arrays (smoke tests / real training)
+* ``shardings(tree, mesh)``-> NamedSharding tree (pjit in_shardings)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import PARAM_RULES, Rules, named_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: str = "bfloat16"
+    logical: Tuple[Optional[str], ...] = ()
+    init: str = "normal"          # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.logical) in (0, len(self.shape)), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=is_spec)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct pytree — inputs to jit.lower, zero allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        tree, is_leaf=is_spec)
+
+
+def shardings(tree, mesh, rules: Rules = PARAM_RULES):
+    def one(s: ParamSpec):
+        logical = s.logical if s.logical else (None,) * len(s.shape)
+        return named_sharding(mesh, s.shape, logical, rules)
+    return jax.tree.map(one, tree, is_leaf=is_spec)
+
+
+def materialize(tree, key, dtype_override: Optional[str] = None):
+    """Concrete init. Each leaf gets a key derived from its path so init is
+    order-independent and stable under refactors."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_spec)[0]
+    treedef = jax.tree.structure(tree, is_leaf=is_spec)
+
+    def init_one(path, s: ParamSpec):
+        pstr = "/".join(str(p) for p in path)
+        sub = jax.random.fold_in(key, np.uint32(hash(pstr) & 0x7FFFFFFF))
+        dt = jnp.dtype(dtype_override or s.dtype)
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        if s.init == "scaled":          # fan-in scaled
+            fan_in = s.shape[0] if s.shape else 1
+            return (jax.random.normal(sub, s.shape, jnp.float32)
+                    * (1.0 / np.sqrt(max(fan_in, 1)))).astype(dt)
+        return (jax.random.normal(sub, s.shape, jnp.float32) * s.scale).astype(dt)
+
+    leaves = [init_one(p, s) for p, s in leaves_with_paths]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def param_count(tree) -> int:
+    return int(sum(int(np.prod(s.shape)) for s in _leaves(tree)))
+
+
+def param_bytes(tree) -> int:
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                   for s in _leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# small helpers shared by the model files
+# ---------------------------------------------------------------------------
+
+def dense_spec(d_in: int, d_out: int, logical=("embed", "ffn"), dtype="bfloat16",
+               init="scaled") -> ParamSpec:
+    return ParamSpec((d_in, d_out), dtype, logical, init)
+
+
+def stack_layer_specs(layer_tree, n_layers: int):
+    """Prepend the scanned layer dim to every leaf of a single-layer tree."""
+    def one(s: ParamSpec):
+        logical = s.logical if s.logical else (None,) * len(s.shape)
+        return ParamSpec((n_layers,) + tuple(s.shape), s.dtype,
+                         ("layers",) + tuple(logical), s.init, s.scale)
+    return jax.tree.map(one, layer_tree, is_leaf=is_spec)

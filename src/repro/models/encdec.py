@@ -1,0 +1,132 @@
+"""Encoder-decoder (Whisper) assembly.
+
+The mel/conv frontend is a STUB per the assignment: inputs carry
+precomputed frame embeddings (B, encoder_seq, frontend_dim); the client-side
+projector maps them to d_model (this projector + the decoder token embedding
+form the ZOO-updated client partition).
+
+Serving: the encoder output is computed once at prefill and passed to every
+decode step (``enc_out`` input), as a production server would cache it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ParamSpec, stack_layer_specs
+from repro.models.layers import apply_norm, embed_lookup, norm_specs, unembed
+from repro.models.mlp import mlp_apply, mlp_specs
+from repro.models.transformer import _boundary, scan_apply, softmax_xent
+from repro.sharding.rules import shard_constraint
+
+
+def _enc_block_specs(cfg):
+    return {"ln1": norm_specs(cfg, cfg.d_model),
+            "attn": attn.attention_specs(cfg),
+            "ln2": norm_specs(cfg, cfg.d_model),
+            "mlp": mlp_specs(cfg, cfg.d_model, cfg.d_ff)}
+
+
+def _dec_block_specs(cfg):
+    return {"ln1": norm_specs(cfg, cfg.d_model),
+            "attn": attn.attention_specs(cfg),
+            "ln_x": norm_specs(cfg, cfg.d_model),
+            "xattn": attn.attention_specs(cfg),
+            "ln2": norm_specs(cfg, cfg.d_model),
+            "mlp": mlp_specs(cfg, cfg.d_model, cfg.d_ff)}
+
+
+def encdec_specs(cfg, max_seq: int):
+    return {
+        "proj": {"w": ParamSpec((cfg.frontend_dim, cfg.d_model),
+                                cfg.param_dtype, ("frontend", "embed"), "scaled"),
+                 "b": ParamSpec((cfg.d_model,), "float32", (None,), "zeros")},
+        "embed": {"table": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                                     cfg.param_dtype, ("vocab", "embed"))},
+        "enc_pos": ParamSpec((cfg.encoder_seq, cfg.d_model), cfg.param_dtype,
+                             (None, "embed")),
+        "pos_embed": ParamSpec((max_seq, cfg.d_model), cfg.param_dtype,
+                               ("vocab", "embed")),
+        "enc_blocks": stack_layer_specs(_enc_block_specs(cfg),
+                                        cfg.n_encoder_layers),
+        "enc_final_norm": norm_specs(cfg, cfg.d_model),
+        "blocks": stack_layer_specs(_dec_block_specs(cfg), cfg.n_layers),
+        "final_norm": norm_specs(cfg, cfg.d_model),
+        "lm_head": {"table": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                                       cfg.param_dtype, ("vocab", "embed"),
+                                       "scaled")},
+    }
+
+
+def encode(cfg, params, frames):
+    """frames (B, Se, frontend_dim) -> enc_out (B, Se, d)."""
+    x = (jnp.einsum("bsf,fd->bsd", frames.astype(jnp.bfloat16),
+                    params["proj"]["w"])
+         + params["proj"]["b"].astype(jnp.bfloat16))
+    x = x + params["enc_pos"][None].astype(x.dtype)
+    x = shard_constraint(x, ("batch", None, "embed_act"))
+
+    def body(h, p_l):
+        h = _boundary(cfg, h)
+        a, _ = attn.attention_apply(cfg, p_l["attn"],
+                                    apply_norm(cfg, p_l["ln1"], h),
+                                    positions=jnp.arange(h.shape[1]),
+                                    causal=False)
+        h = h + a
+        h = h + mlp_apply(cfg, p_l["mlp"], apply_norm(cfg, p_l["ln2"], h))
+        return h, None
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = scan_apply(cfg, body, x, params["enc_blocks"],
+                      cfg.n_encoder_layers)
+    return apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def decode_blocks(cfg, params, x, enc_out, *, positions, caches=None,
+                  cur_pos=None, window=0):
+    def body(h, xs):
+        p_l, c_l = xs
+        h = _boundary(cfg, h)
+        a, new_c = attn.attention_apply(
+            cfg, p_l["attn"], apply_norm(cfg, p_l["ln1"], h),
+            positions=positions, cache=c_l, cur_pos=cur_pos, window=window)
+        h = h + a
+        xa, _ = attn.attention_apply(
+            cfg, p_l["xattn"], apply_norm(cfg, p_l["ln_x"], h),
+            positions=positions, kv_override=enc_out)
+        h = h + xa
+        h = h + mlp_apply(cfg, p_l["mlp"], apply_norm(cfg, p_l["ln2"], h))
+        return h, new_c
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, new_caches = scan_apply(cfg, body, x, (params["blocks"], caches),
+                               cfg.n_layers)
+    return x, new_caches
+
+
+def forward(cfg, params, inputs, *, caches=None, cur_pos=None, window=0):
+    """Train/prefill: inputs = {frames, tokens}. Decode: {tokens(B,1),
+    enc_out} + caches."""
+    tokens = inputs["tokens"]
+    if caches is None:
+        positions = jnp.arange(tokens.shape[1])
+        enc_out = encode(cfg, params, inputs["frames"])
+    else:
+        positions = jnp.asarray(cur_pos)[None]
+        enc_out = inputs["enc_out"]
+    x = embed_lookup(params["embed"], tokens)
+    pos_table = params["pos_embed"]
+    x = x + jnp.take(pos_table,
+                     jnp.clip(positions, 0, pos_table.shape[0] - 1),
+                     axis=0).astype(x.dtype)
+    x, new_caches = decode_blocks(cfg, params, x, enc_out,
+                                  positions=positions, caches=caches,
+                                  cur_pos=cur_pos, window=window)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["lm_head"], x)
+    return logits, (new_caches if caches is not None else None), jnp.float32(0.0)
+
+
+def seq2seq_loss(cfg, params, inputs, *, window=0):
+    logits, _, _ = forward(cfg, params, inputs, window=window)
+    ce = softmax_xent(logits[:, :-1], inputs["labels"][:, 1:], cfg.padded_vocab)
+    return jnp.mean(ce), {}

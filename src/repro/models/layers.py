@@ -1,0 +1,95 @@
+"""Primitive layers: norms, activations, RoPE, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+# ---------------------------------------------------------------- norms ----
+
+def norm_specs(cfg, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((d,), "float32", (None,), "ones"),
+                "bias": ParamSpec((d,), "float32", (None,), "zeros")}
+    return {"scale": ParamSpec((d,), "float32", (None,), "ones")}
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_norm_simple(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ----------------------------------------------------------- activations ---
+
+def activation(name: str, x, gate=None):
+    if name == "swiglu":
+        assert gate is not None
+        return jax.nn.silu(gate) * x
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ------------------------------------------------------------------ RoPE ---
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float, has_heads: bool = True):
+    """x: (..., S, H, hd) if has_heads else (..., S, hd); positions: (S,)
+    (or (1,) for decode — broadcasts)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv   # (S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if has_heads:                                      # align with (S, H, hd)
+        cos, sin = cos[..., :, None, :], sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding ---
+
+def embed_specs(cfg):
+    return {"table": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                               cfg.param_dtype, ("vocab", "embed"), "normal")}
+
+
+def embed_lookup(p, tokens, *, iota: bool = False):
+    """Token embedding. iota=True uses the one-hot-matmul form: on a
+    vocab-sharded table the plain gather triggers GSPMD's 'involuntary full
+    rematerialization' (the table is replicated per device); the matmul
+    form keeps the contraction shard-local (§Perf)."""
+    if not iota:
+        return jnp.take(p["table"], tokens, axis=0)
+    table = p["table"]
+    V = table.shape[0]
+    onehot = jax.nn.one_hot(tokens, V, dtype=table.dtype)
+    return jnp.einsum("...v,vd->...d", onehot, table)
+
+
+def unembed(p, x):
+    """x (..., d) -> logits (..., padded_vocab)."""
+    return jnp.einsum("...d,vd->...v", x, p["table"])

@@ -1,0 +1,27 @@
+"""Dense MLP blocks (SwiGLU / GELU / squared-ReLU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.layers import activation
+from repro.sharding.rules import shard_constraint
+
+
+def mlp_specs(cfg, d: int, d_ff: int):
+    pd = cfg.param_dtype
+    sp = {
+        "w_up": ParamSpec((d, d_ff), pd, ("embed", "ffn"), "scaled"),
+        "w_down": ParamSpec((d_ff, d), pd, ("ffn", "embed"), "scaled"),
+    }
+    if cfg.act == "swiglu":
+        sp["w_gate"] = ParamSpec((d, d_ff), pd, ("embed", "ffn"), "scaled")
+    return sp
+
+
+def mlp_apply(cfg, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"]) if cfg.act == "swiglu" else None
+    h = activation(cfg.act, h, gate)
+    h = shard_constraint(h, ("batch", None, "ffn_act"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"]).astype(x.dtype)

@@ -1,0 +1,178 @@
+"""Unified model API: every assigned architecture becomes a ``Model`` with
+
+* ``param_specs``            — ParamSpec pytree (abstract; materialize for real runs)
+* ``loss_fn(params, batch)`` — global-model training loss (FOO baselines use
+                               it directly; the cascade partitions it)
+* ``forward / serve_decode`` — inference entry points
+* ``input_specs(shape)``     — ShapeDtypeStruct stand-ins for every input of
+                               the requested (shape × mode), incl. caches
+* ``client_keys``            — top-level param keys forming the ZOO client
+                               partition (embedding + modality projector)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn_mod
+from repro.models import encdec, rwkv as rwkv_mod, ssm as ssm_mod, transformer
+from repro.models.common import ParamSpec, abstract, stack_layer_specs
+
+# window used by the sliding-window (long_500k) variants
+LONG_WINDOW = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    param_specs: Any
+    loss_fn: Callable            # (params, batch) -> (loss, aux)
+    forward_fn: Callable         # (params, inputs) -> logits
+    decode_fn: Callable          # (params, inputs, caches, cur_pos) -> (logits, caches)
+    client_keys: Tuple[str, ...]
+
+    def input_specs(self, shape: ShapeConfig, *, window: int = 0):
+        return build_input_specs(self.cfg, shape)
+
+    def cache_specs(self, shape: ShapeConfig):
+        return build_cache_specs(self.cfg, shape.global_batch, shape.seq_len)
+
+
+def _client_keys(cfg: ModelConfig) -> Tuple[str, ...]:
+    keys = ["embed"]
+    if cfg.frontend_dim:
+        keys.append("proj")
+    return tuple(keys)
+
+
+def build_model(cfg: ModelConfig, *, max_seq: int = 8192,
+                window: int = 0, window_gather: bool = False,
+                gather_experts: bool = False) -> Model:
+    """window > 0 selects the sliding-window attention variant (used for
+    long_500k on attention archs). window_gather / gather_experts are
+    §Perf decode variants (see attention.decode_attend / moe.moe_apply)."""
+    if cfg.is_encoder_decoder:
+        specs = encdec.encdec_specs(cfg, max_seq)
+
+        def loss_fn(params, batch):
+            return encdec.seq2seq_loss(cfg, params, batch, window=window)
+
+        def forward_fn(params, inputs):
+            return encdec.forward(cfg, params, inputs, window=window)[0]
+
+        def decode_fn(params, inputs, caches, cur_pos):
+            logits, new_caches, _ = encdec.forward(
+                cfg, params, inputs, caches=caches, cur_pos=cur_pos,
+                window=window)
+            return logits, new_caches
+    else:
+        specs = transformer.backbone_specs(cfg, max_seq)
+
+        def loss_fn(params, batch):
+            return transformer.lm_loss(cfg, params, batch, window=window)
+
+        def forward_fn(params, inputs):
+            return transformer.forward(cfg, params, inputs, window=window)[0]
+
+        def decode_fn(params, inputs, caches, cur_pos):
+            logits, new_caches, _ = transformer.forward(
+                cfg, params, inputs, caches=caches, cur_pos=cur_pos,
+                window=window, window_gather=window_gather,
+                gather_experts=gather_experts)
+            return logits, new_caches
+
+    return Model(cfg=cfg, param_specs=specs, loss_fn=loss_fn,
+                 forward_fn=forward_fn, decode_fn=decode_fn,
+                 client_keys=_client_keys(cfg))
+
+
+# ============================================================ input specs ==
+
+def build_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, ParamSpec]:
+    """ParamSpec dict for the *data* inputs of (cfg, shape).
+
+    Decode shapes get tokens (B,1); caches come from build_cache_specs."""
+    B, S = shape.global_batch, shape.seq_len
+    sp: Dict[str, ParamSpec] = {}
+    if shape.is_decode:
+        sp["tokens"] = ParamSpec((B, 1), "int32", ("batch", None))
+        if cfg.is_encoder_decoder:
+            sp["enc_out"] = ParamSpec((B, cfg.encoder_seq, cfg.d_model),
+                                      "bfloat16", ("batch", None, "embed_act"))
+        return sp
+
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_vision_tokens
+        sp["tokens"] = ParamSpec((B, s_text), "int32", ("batch", None))
+        sp["labels"] = ParamSpec((B, s_text), "int32", ("batch", None))
+        sp["patch_embeds"] = ParamSpec((B, cfg.n_vision_tokens, cfg.frontend_dim),
+                                       "bfloat16", ("batch", None, None))
+    elif cfg.is_encoder_decoder:
+        sp["tokens"] = ParamSpec((B, S), "int32", ("batch", None))
+        sp["labels"] = ParamSpec((B, S), "int32", ("batch", None))
+        sp["frames"] = ParamSpec((B, cfg.encoder_seq, cfg.frontend_dim),
+                                 "bfloat16", ("batch", None, None))
+    else:
+        sp["tokens"] = ParamSpec((B, S), "int32", ("batch", None))
+        sp["labels"] = ParamSpec((B, S), "int32", ("batch", None))
+    if shape.kind == "prefill":
+        sp.pop("labels", None)
+    return sp
+
+
+def build_cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    """Stacked per-layer decode state for the family (None for non-decode)."""
+    if cfg.is_encoder_decoder:
+        return attn_mod.cache_specs(cfg, batch, seq)
+    if cfg.family == "ssm":
+        return rwkv_mod.rwkv_state_specs(cfg, batch, cfg.d_model)
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        d_in = cfg.ssm_expand * cfg.d_model
+        H = d_in // cfg.ssm_head_dim
+        ssm_states = {
+            "ssm": ParamSpec((n_super, cfg.attn_every, batch, H,
+                              cfg.ssm_head_dim, cfg.ssm_state), "float32",
+                             (None, "layers", "cache_batch", "cache_heads",
+                              None, None)),
+            "conv": ParamSpec((n_super, cfg.attn_every, batch,
+                               ssm_mod.CONV_W - 1, d_in), "float32",
+                              (None, "layers", "cache_batch", None, "ssm_inner")),
+        }
+        hd = cfg.resolved_head_dim
+        attn_caches = {
+            "k": ParamSpec((n_super, batch, seq, cfg.n_kv_heads, hd),
+                           "bfloat16",
+                           ("layers", "cache_batch", "cache_seq",
+                            "cache_heads", None)),
+            "v": ParamSpec((n_super, batch, seq, cfg.n_kv_heads, hd),
+                           "bfloat16",
+                           ("layers", "cache_batch", "cache_seq",
+                            "cache_heads", None)),
+        }
+        return (ssm_states, attn_caches)
+    if cfg.first_k_dense and cfg.n_experts:
+        full = attn_mod.cache_specs(cfg, batch, seq)
+
+        def split(sp: ParamSpec, n):
+            return ParamSpec((n,) + sp.shape[1:], sp.dtype, sp.logical,
+                             sp.init, sp.scale)
+        dense = {k: split(v, cfg.first_k_dense) for k, v in full.items()}
+        main = {k: split(v, cfg.n_layers - cfg.first_k_dense)
+                for k, v in full.items()}
+        return {"dense": dense, "main": main}
+    return attn_mod.cache_specs(cfg, batch, seq)
+
+
+def abstract_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for data inputs (+ caches & cur_pos for decode)."""
+    data = abstract(build_input_specs(cfg, shape))
+    if not shape.is_decode:
+        return data, None, None
+    caches = abstract(build_cache_specs(cfg, shape.global_batch, shape.seq_len))
+    cur_pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return data, caches, cur_pos

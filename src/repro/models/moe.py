@@ -1,0 +1,212 @@
+"""Mixture-of-Experts with expert-parallel sharding.
+
+Three dispatch paths (selected automatically):
+
+* ``train/prefill`` — per-batch-row sort/scatter **capacity dispatch**:
+  within each batch row, (S·k) token-expert pairs are sorted by expert id,
+  positioned by rank-in-expert, and scattered into an (E, C, d) buffer with
+  capacity C = ceil(S·k/E · capacity_factor). Expert matmuls are then dense
+  batched GEMMs einsum'd against (E, d, f) weights — FLOPs ≈ active-token
+  FLOPs × capacity_factor, and the expert dim shards over the "model" mesh
+  axis (expert parallelism; the scatter induces the all-to-all).
+  All per-row ops vectorize over the (data-sharded) batch dim, so dispatch
+  never communicates across data shards.
+* ``decode, large batch`` — dense loop over experts with masking: every
+  expert computes every token. With B·k >= E every expert's weights must be
+  read anyway, so decode stays memory-optimal even though FLOPs (cheap,
+  decode is memory-bound) are inflated E/k×.
+* ``decode, tiny batch`` (B·k << E, e.g. long_500k) — gather only the
+  routed experts' weights (B·k weight rows instead of E) — §Perf
+  optimization, enabled with ``gather_experts=True``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.layers import activation
+from repro.sharding.rules import shard_constraint
+
+
+def moe_specs(cfg, d: int):
+    pd = cfg.param_dtype
+    E, f = cfg.n_experts, cfg.moe_d_ff
+    sp = {
+        # router is tiny (d×E fp32) — keep it replicated; FSDP-sharding it
+        # makes GSPMD reshard the full fp32 activation stream instead
+        "router": ParamSpec((d, E), "float32", (None, None), "scaled"),
+        "w_up": ParamSpec((E, d, f), pd, ("experts", "expert_d", None), "scaled"),
+        "w_down": ParamSpec((E, f, d), pd, ("experts", None, "expert_d"), "scaled"),
+    }
+    if cfg.act == "swiglu":
+        sp["w_gate"] = ParamSpec((E, d, f), pd, ("experts", "expert_d", None), "scaled")
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        sp["shared_up"] = ParamSpec((d, fs), pd, ("embed", "ffn"), "scaled")
+        sp["shared_down"] = ParamSpec((fs, d), pd, ("ffn", "embed"), "scaled")
+        if cfg.act == "swiglu":
+            sp["shared_gate"] = ParamSpec((d, fs), pd, ("embed", "ffn"), "scaled")
+    return sp
+
+
+def _router(cfg, p, x):
+    """x (B,S,d) -> (gates (B,S,k) fp32 normalized, idx (B,S,k), aux loss)."""
+    # keep x bf16 on the wire; accumulate in fp32 via the dot itself
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # switch-style load-balance loss
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=(0, 1))                              # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / cfg.top_k                                   # (E,)
+    aux = E * jnp.sum(me * ce) * cfg.load_balance_coef
+    return gates, idx, aux
+
+
+def _expert_ffn_grouped(cfg, p, xb):
+    """xb (B,G,E,C,d) -> same, through the per-expert MLP (E sharded)."""
+    h = jnp.einsum("bgecd,edf->bgecf", xb, p["w_up"])
+    g = jnp.einsum("bgecd,edf->bgecf", xb, p["w_gate"]) \
+        if cfg.act == "swiglu" else None
+    h = activation(cfg.act, h, g)
+    h = shard_constraint(h, ("batch", None, "experts", None, None))
+    y = jnp.einsum("bgecf,efd->bgecd", h, p["w_down"])
+    # pin the einsum output to expert-parallel BEFORE the reverse
+    # all-to-all, otherwise GSPMD back-propagates the group sharding into
+    # the einsum and replicates the expert weights (14 GiB for deepseek).
+    return shard_constraint(y, ("batch", None, "experts", None, None))
+
+
+def moe_apply_dispatch(cfg, p, x):
+    """Grouped sort-based capacity dispatch (train & prefill).
+
+    GATHER-ONLY + GROUP-LOCAL: each batch row's sequence is split into
+    ``moe_groups`` groups aligned with the sequence-parallel shards, and
+    dispatch (sort, rank, capacity) happens *within* a group — so all the
+    index math and token gathers are shard-local, and the single reshard
+    (group-sharded -> expert-sharded) of the (…,E,C,d) buffer lowers to an
+    all-to-all, exactly the EP pattern of production MoE systems. Large
+    scatters are avoided entirely (GSPMD would replicate them).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    G = min(cfg.moe_groups, S)
+    while S % G:                                         # smoke-size guard
+        G -= 1
+    Sg = S // G
+    N = Sg * k                                           # pairs per group
+    C = max(int(math.ceil(N / E * cfg.capacity_factor)), 4)
+
+    gates, idx, aux = _router(cfg, p, x)                 # (B,S,k)
+    xg = x.reshape(B, G, Sg, d)
+    xg = shard_constraint(xg, ("batch", "seq_act", None, None))
+    flat_e = idx.reshape(B, G, N)                        # expert id per pair
+    flat_g = gates.reshape(B, G, N)
+    tok_of_pair = jnp.repeat(jnp.arange(Sg), k)[None, None]      # (1,1,N)
+    tok_of_pair = jnp.broadcast_to(tok_of_pair, (B, G, N))
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)    # sort pairs by expert
+    inv_order = jnp.argsort(order, axis=-1)
+    se = jnp.take_along_axis(flat_e, order, -1)
+    st = jnp.take_along_axis(tok_of_pair, order, -1)
+
+    counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=2)
+    starts = jnp.cumsum(counts, axis=-1) - counts        # (B,G,E) exclusive
+    rank = jnp.arange(N)[None, None] - jnp.take_along_axis(starts, se, -1)
+    keep = rank < C
+
+    # dispatch: gather the c-th pair of each expert from the sorted stream
+    xs = jnp.take_along_axis(xg, st[..., None], axis=2)  # (B,G,N,d)
+    idx_ec = starts[..., None] + jnp.arange(C)[None, None, None]  # (B,G,E,C)
+    valid = (jnp.arange(C)[None, None, None]
+             < jnp.minimum(counts, C)[..., None])
+    idx_flat = jnp.clip(idx_ec.reshape(B, G, E * C), 0, N - 1)
+    xb = jnp.take_along_axis(xs, idx_flat[..., None], axis=2)    # (B,G,EC,d)
+    xb = xb * valid.reshape(B, G, E * C, 1).astype(xb.dtype)
+    xb = xb.reshape(B, G, E, C, d)
+    # the reshard below IS the all-to-all: groups -> experts
+    xb = shard_constraint(xb, ("batch", None, "experts", None, None))
+
+    yb = _expert_ffn_grouped(cfg, p, xb)
+    yb = shard_constraint(yb, ("batch", "seq_act", None, None, None)) \
+        .reshape(B, G, E * C, d)
+
+    # return path: pair n reads slot (se[n], rank[n]) — another gather
+    slot = jnp.clip(se * C + jnp.clip(rank, 0, C - 1), 0, E * C - 1)
+    ys = jnp.take_along_axis(yb, slot[..., None], axis=2)        # (B,G,N,d)
+    sg = jnp.take_along_axis(flat_g, order, -1)
+    ys = ys * (sg * keep)[..., None]
+
+    # unsort (gather via inverse permutation), pairs -> (Sg, k), sum
+    ys = jnp.take_along_axis(ys, inv_order[..., None], axis=2)
+    out = jnp.sum(ys.reshape(B, G, Sg, k, d).astype(jnp.float32), axis=3)
+    out = out.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        out = out + _shared(cfg, p, x)
+    return out.astype(x.dtype), aux
+
+
+def moe_apply_dense(cfg, p, x):
+    """Masked dense loop (decode with large batch): every expert runs every
+    token; contributions are gated by the router mask."""
+    B, S, d = x.shape
+    E = cfg.n_experts
+    gates, idx, aux = _router(cfg, p, x)
+    comb = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32)
+                   * gates[..., None], axis=2)            # (B,S,E)
+
+    h = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    g = jnp.einsum("bsd,edf->bsef", x, p["w_gate"]) if cfg.act == "swiglu" else None
+    h = activation(cfg.act, h, g)
+    y = jnp.einsum("bsef,efd->bsed", h, p["w_down"])
+    out = jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32), comb)
+
+    if cfg.n_shared_experts:
+        out = out + _shared(cfg, p, x)
+    return out.astype(x.dtype), aux
+
+
+def moe_apply_gather(cfg, p, x):
+    """Tiny-batch decode: gather the k routed experts' weights per token.
+    Reads B·k expert weight sets instead of E (§Perf for long_500k)."""
+    B, S, d = x.shape
+    assert S == 1
+    gates, idx, aux = _router(cfg, p, x)                  # (B,1,k)
+    idxf = idx[:, 0]                                      # (B,k)
+    up = jnp.take(p["w_up"], idxf, axis=0)                # (B,k,d,f)
+    down = jnp.take(p["w_down"], idxf, axis=0)            # (B,k,f,d)
+    h = jnp.einsum("bd,bkdf->bkf", x[:, 0], up)
+    if cfg.act == "swiglu":
+        gate_w = jnp.take(p["w_gate"], idxf, axis=0)
+        g = jnp.einsum("bd,bkdf->bkf", x[:, 0], gate_w)
+    else:
+        g = None
+    h = activation(cfg.act, h, g)
+    y = jnp.einsum("bkf,bkfd->bkd", h, down)
+    out = jnp.einsum("bkd,bk->bd", y.astype(jnp.float32), gates[:, 0])[:, None]
+    if cfg.n_shared_experts:
+        out = out + _shared(cfg, p, x)
+    return out.astype(x.dtype), aux
+
+
+def _shared(cfg, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["shared_up"])
+    g = jnp.einsum("bsd,df->bsf", x, p["shared_gate"]) if cfg.act == "swiglu" else None
+    h = activation(cfg.act, h, g)
+    return jnp.einsum("bsf,fd->bsd", h, p["shared_down"]).astype(jnp.float32)
+
+
+def moe_apply(cfg, p, x, *, decode: bool = False, gather_experts: bool = False):
+    if decode and gather_experts and x.shape[0] * cfg.top_k <= cfg.n_experts:
+        return moe_apply_gather(cfg, p, x)
+    if decode:
+        return moe_apply_dense(cfg, p, x)
+    return moe_apply_dispatch(cfg, p, x)

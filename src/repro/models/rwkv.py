@@ -1,0 +1,213 @@
+"""RWKV6 (Finch) — time-mix with data-dependent per-channel decay.
+
+Per head (key dim K = value dim V = rwkv_head_dim):
+
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T            (K, V) state
+    y_t   = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+
+with w_t ∈ (0,1)^K *data-dependent* (the Finch contribution) via a small
+lora: w_t = exp(-exp(w0 + tanh(x_t A) B)). Train/prefill use a chunked
+form (scan over chunks, (c×c) intra matrices, (K,V) carried state);
+decode updates the state directly. Channel-mix is the squared-relu FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.sharding.rules import shard_constraint
+
+W_LORA = 64
+
+
+def rwkv_specs(cfg, d: int):
+    pd = cfg.param_dtype
+    return {
+        "w_r": ParamSpec((d, d), pd, ("embed", "heads_out"), "scaled"),
+        "w_k": ParamSpec((d, d), pd, ("embed", "heads_out"), "scaled"),
+        "w_v": ParamSpec((d, d), pd, ("embed", "heads_out"), "scaled"),
+        "w_g": ParamSpec((d, d), pd, ("embed", "heads_out"), "scaled"),
+        "w_o": ParamSpec((d, d), pd, ("heads_out", "embed"), "scaled"),
+        "decay_base": ParamSpec((d,), "float32", (None,), "zeros"),
+        "decay_lora_a": ParamSpec((d, W_LORA), pd, ("embed", None), "scaled"),
+        "decay_lora_b": ParamSpec((W_LORA, d), pd, (None, None), "scaled"),
+        "bonus_u": ParamSpec((d,), "float32", (None,), "zeros"),
+        "mix_r": ParamSpec((d,), "float32", (None,), "zeros"),
+        "mix_k": ParamSpec((d,), "float32", (None,), "zeros"),
+        "mix_v": ParamSpec((d,), "float32", (None,), "zeros"),
+        "ln_x": ParamSpec((d,), "float32", (None,), "ones"),
+    }
+
+
+def rwkv_state_specs(cfg, batch: int, d: int, dtype="float32"):
+    H = cfg.n_rwkv_heads
+    K = cfg.rwkv_head_dim
+    return {
+        "wkv": ParamSpec((cfg.n_layers, batch, H, K, K), dtype,
+                         ("layers", "cache_batch", "cache_heads", None, None)),
+        "shift": ParamSpec((cfg.n_layers, batch, d), dtype,
+                           ("layers", "cache_batch", None)),
+        "shift_c": ParamSpec((cfg.n_layers, batch, d), dtype,
+                             ("layers", "cache_batch", None)),
+    }
+
+
+def _token_shift(x, mix, prev=None):
+    """lerp(x_t, x_{t-1}, mix). prev: (B,d) last token of previous step."""
+    B, S, d = x.shape
+    if prev is None:
+        prev = jnp.zeros((B, d), x.dtype)
+    xs = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    m = jax.nn.sigmoid(mix).astype(x.dtype)
+    return x * (1 - m) + xs * m
+
+
+def wkv6_recurrent_ref(r, k, v, w, u):
+    """Naive token scan — oracle. r,k,v,w: (B,S,H,K); u: (H,K)."""
+    B, S, H, K = r.shape
+
+    def step(S_, t):
+        r_t, k_t, v_t, w_t = t                          # (B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[None, :, :, None] * kv)
+        S_ = S_ * w_t[..., None] + kv
+        return S_, out
+
+    S0 = jnp.zeros((B, H, K, K), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, S0,
+        tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (r, k, v, w)))
+    return ys.transpose(1, 0, 2, 3)
+
+
+def wkv6_chunked(r, k, v, w, u, chunk, state0=None):
+    """Chunked wkv6. r,k,v,w (B,S,H,K); u (H,K). Returns (y, final_state).
+
+    Derivation: with cw_t = sum_{s<=t} log w_s, the weight of k_j on the
+    readout at i>j is exp(cw_i - cw_j) / w_i ... concretely
+    S_{i-1} contains k_j scaled by prod_{s=j+1..i-1} w_s = exp(cw_{i-1}-cw_j).
+    """
+    B, S, H, K = r.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    f32 = jnp.float32
+
+    rr = r.reshape(B, nc, c, H, K).transpose(1, 0, 2, 3, 4).astype(f32)
+    kk = k.reshape(B, nc, c, H, K).transpose(1, 0, 2, 3, 4).astype(f32)
+    vv = v.reshape(B, nc, c, H, K).transpose(1, 0, 2, 3, 4).astype(f32)
+    ww = w.reshape(B, nc, c, H, K).transpose(1, 0, 2, 3, 4).astype(f32)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, K), f32)
+
+    ii = jnp.arange(c)
+    strict = (ii[:, None] > ii[None, :])                  # j < i
+    diag = jnp.eye(c, dtype=bool)
+
+    def scan_fn(S_, t):
+        r_c, k_c, v_c, w_c = t                            # (B,c,H,K)
+        lw = jnp.log(jnp.maximum(w_c, 1e-20))
+        cw = jnp.cumsum(lw, axis=1)                       # (B,c,H,K)
+        # intra: coeff(i,j) = exp(cw_{i-1} - cw_j) for j<i ; u·k_i on diag.
+        # Stability: factor around the chunk-midpoint cum-decay so both
+        # exp() factors stay within fp32 range (decay is also clamped at
+        # rwkv_time_mix; see DESIGN.md numerics note).
+        ref = cw[:, c // 2][:, None]                      # (B,1,H,K)
+        ri = r_c * jnp.exp(cw - lw - ref)                 # r_i e^{cw_{i-1}-ref}
+        kj = k_c * jnp.exp(ref - cw)                      # k_j e^{ref-cw_j}
+        A = jnp.einsum("bihk,bjhk->bijh", ri, kj)
+        A = jnp.where(strict[None, :, :, None], A, 0.0)
+        Adiag = jnp.einsum("bihk,hk,bihk->bih", r_c, u, k_c)
+        y = jnp.einsum("bijh,bjhv->bihv", A, v_c)
+        y = y + Adiag[..., None] * v_c
+        # inter: r_i e^{cw_{i-1}} @ S_prev (exponent <= 0: stable)
+        ri0 = r_c * jnp.exp(cw - lw)
+        y = y + jnp.einsum("bihk,bhkv->bihv", ri0, S_)
+        # state: S' = e^{cw_last} S + sum_j e^{cw_last - cw_j} k_j v_j^T
+        # (both exponents <= 0: stable)
+        wtot = jnp.exp(cw[:, -1])                         # (B,H,K)
+        kj2 = k_c * jnp.exp(cw[:, -1][:, None] - cw)
+        S_ = (S_ * wtot[..., None]
+              + jnp.einsum("bjhk,bjhv->bhkv", kj2, v_c))
+        return S_, y
+
+    final, ys = jax.lax.scan(scan_fn, state0, (rr, kk, vv, ww))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, K)
+    return y, final
+
+
+def rwkv_time_mix(cfg, p, x, *, state=None):
+    """x (B,S,d) -> (out, new_state). state: dict(wkv (B,H,K,K), shift (B,d))."""
+    B, S, d = x.shape
+    H, K = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    dt_ = x.dtype
+
+    prev = None if state is None else state["shift"].astype(dt_)
+    xr = _token_shift(x, p["mix_r"], prev)
+    xk = _token_shift(x, p["mix_k"], prev)
+    xv = _token_shift(x, p["mix_v"], prev)
+
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(B, S, H, K)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(B, S, H, K)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(B, S, H, K)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", x, p["w_g"]))
+
+    # data-dependent decay (the Finch contribution)
+    lora = jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", x, p["decay_lora_a"])),
+        p["decay_lora_b"])
+    # clamp per-token log-decay to [-4, -1e-3]: keeps the chunked form's
+    # exp() factors in fp32 range (chunk 32 -> max half-range exponent 64)
+    log_w = -jnp.exp(p["decay_base"] + lora.astype(jnp.float32))
+    w = jnp.exp(jnp.clip(log_w, -4.0, -1e-3))
+    w = w.reshape(B, S, H, K)
+    u = p["bonus_u"].reshape(H, K)
+
+    r4 = shard_constraint(r, ("batch", None, "heads_act", None))
+    if state is None:
+        y, _ = wkv6_chunked(r4, k, v, w, u, cfg.rwkv_chunk)
+        new_state = None
+    else:
+        S0 = state["wkv"].astype(jnp.float32)
+        k0 = k[:, 0].astype(jnp.float32)
+        v0 = v[:, 0].astype(jnp.float32)
+        r0 = r[:, 0].astype(jnp.float32)
+        kv = jnp.einsum("bhk,bhv->bhkv", k0, v0)
+        y = jnp.einsum("bhk,bhkv->bhv", r0, S0 + u[None, :, :, None] * kv)[:, None]
+        S1 = S0 * w[:, 0][..., None] + kv
+        new_state = {"wkv": S1.astype(state["wkv"].dtype),
+                     "shift": x[:, -1].astype(state["shift"].dtype)}
+
+    # group-norm-ish per head then output gate
+    y = y.reshape(B, S, d).astype(jnp.float32)
+    mu = jnp.mean(y.reshape(B, S, H, K), -1, keepdims=True)
+    var = jnp.var(y.reshape(B, S, H, K), -1, keepdims=True)
+    y = ((y.reshape(B, S, H, K) - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, d)
+    y = y * p["ln_x"]
+    out = jnp.einsum("bse,ed->bsd", (y.astype(dt_) * g.astype(dt_)), p["w_o"])
+    return out, new_state
+
+
+def rwkv_channel_mix_specs(cfg, d: int):
+    pd = cfg.param_dtype
+    return {
+        "w_k": ParamSpec((d, cfg.d_ff), pd, ("embed", "ffn"), "scaled"),
+        "w_v": ParamSpec((cfg.d_ff, d), pd, ("ffn", "embed"), "scaled"),
+        "w_r": ParamSpec((d, d), pd, ("embed", None), "scaled"),
+        "mix_k": ParamSpec((d,), "float32", (None,), "zeros"),
+        "mix_r": ParamSpec((d,), "float32", (None,), "zeros"),
+    }
+
+
+def rwkv_channel_mix(cfg, p, x, *, prev=None):
+    xk = _token_shift(x, p["mix_k"], prev)
+    xr = _token_shift(x, p["mix_r"], prev)
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"])
+    k = jnp.square(jax.nn.relu(k))
+    k = shard_constraint(k, ("batch", None, "ffn_act"))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"]))
+    return (r * kv).astype(x.dtype)

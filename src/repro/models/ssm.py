@@ -1,0 +1,187 @@
+"""Mamba2 (SSD) layer — chunked scan for train/prefill, state step for decode.
+
+Recurrence per head h (state N = cfg.ssm_state, head dim P = ssm_head_dim):
+
+    a_t    = exp(-softplus(dt_t) * exp(A_log_h))            scalar per head
+    S_t    = a_t * S_{t-1} + softplus(dt_t) * (x_t ⊗ B_t)   (P, N)
+    y_t    = S_t @ C_t + D_h * x_t                           (P,)
+
+The chunked (SSD) form scans over chunks of length ``ssm_chunk``: within a
+chunk the contribution is an attention-like (c×c) masked matrix; across
+chunks only the (P×N) state is carried — sub-quadratic in sequence length
+and TPU-friendly (all chunk math is dense matmuls for the MXU).
+
+A short causal depthwise conv (width 4) precedes the SSM per Mamba2; its
+tail is carried as decode state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.sharding.rules import shard_constraint
+
+CONV_W = 4
+
+
+def ssm_specs(cfg, d: int):
+    pd = cfg.param_dtype
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    return {
+        "w_in": ParamSpec((d, 2 * d_in), pd, ("embed", "ssm_inner"), "scaled"),
+        "w_bc": ParamSpec((d, 2 * N), pd, ("embed", None), "scaled"),
+        "w_dt": ParamSpec((d, H), pd, ("embed", None), "scaled"),
+        "dt_bias": ParamSpec((H,), "float32", (None,), "zeros"),
+        "A_log": ParamSpec((H,), "float32", (None,), "zeros"),
+        "D": ParamSpec((H,), "float32", (None,), "ones"),
+        "conv_w": ParamSpec((CONV_W, d_in), pd, (None, "ssm_inner"), "scaled"),
+        "w_out": ParamSpec((d_in, d), pd, ("ssm_inner", "embed"), "scaled"),
+    }
+
+
+def ssm_state_specs(cfg, batch: int, d: int, dtype="float32"):
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    return {
+        "ssm": ParamSpec((cfg.n_layers, batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                         dtype, ("layers", "cache_batch", "cache_heads", None, None)),
+        "conv": ParamSpec((cfg.n_layers, batch, CONV_W - 1, d_in), dtype,
+                          ("layers", "cache_batch", None, "ssm_inner")),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv. x (B,S,D), w (W,D), tail (B,W-1,D) or None."""
+    B, S, D = x.shape
+    pad = (jnp.zeros((B, CONV_W - 1, D), x.dtype) if tail is None
+           else tail.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + S] * w[i] for i in range(CONV_W))
+    new_tail = xp[:, S:]                                  # last W-1 inputs
+    return out, new_tail
+
+
+def _ssd_chunked(xh, a, dt, Bm, Cm, chunk, state0=None):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P), a (B,S,H) decay in (0,1], dt (B,S,H), Bm/Cm (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+
+    xr = xh.reshape(B, nc, c, H, P)
+    ar = a.reshape(B, nc, c, H)
+    dtr = dt.reshape(B, nc, c, H)
+    Br = Bm.reshape(B, nc, c, N)
+    Cr = Cm.reshape(B, nc, c, N)
+
+    la = jnp.log(jnp.maximum(ar, 1e-20)).astype(jnp.float32)
+    cum = jnp.cumsum(la, axis=2)                          # (B,nc,c,H) log prod a_1..t
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def scan_fn(state, inp):
+        x_c, cum_c, dt_c, B_c, C_c = inp                  # (B,c,H,P) etc.
+        # intra-chunk: y[i] += sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i·B_j) x_j
+        seg = cum_c[:, :, None, :] - cum_c[:, None, :, :]     # (B,i,j,H)
+        mask = jnp.tril(jnp.ones((x_c.shape[1], x_c.shape[1]), bool))
+        # double-where: exp() must never see the +inf upper triangle or its
+        # cotangent NaNs the backward pass
+        seg = jnp.where(mask[None, :, :, None], seg, 0.0)
+        dec = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", C_c.astype(jnp.float32),
+                        B_c.astype(jnp.float32))              # (B,i,j)
+        M = dec * cb[..., None] * dt_c[:, None, :, :]         # (B,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, x_c.astype(jnp.float32))
+        # inter-chunk: y[i] += exp(cum_i) * C_i @ state^T
+        y_inter = jnp.einsum("bin,bhpn->bihp", C_c.astype(jnp.float32),
+                             state) * jnp.exp(cum_c)[..., None]
+        # state update: S' = a_total*S + sum_j exp(cum_last-cum_j) dt_j x_j⊗B_j
+        w_j = jnp.exp(cum_c[:, -1:, :] - cum_c) * dt_c        # (B,c,H)
+        ds = jnp.einsum("bjhp,bjn,bjh->bhpn", x_c.astype(jnp.float32),
+                        B_c.astype(jnp.float32), w_j)
+        state = state * jnp.exp(cum_c[:, -1])[:, :, None, None] + ds
+        return state, (y_intra + y_inter)
+
+    final, ys = jax.lax.scan(
+        scan_fn, state0,
+        (xr.transpose(1, 0, 2, 3, 4), cum.transpose(1, 0, 2, 3),
+         dtr.transpose(1, 0, 2, 3), Br.transpose(1, 0, 2, 3),
+         Cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, final
+
+
+def ssd_recurrent_ref(xh, a, dt, Bm, Cm):
+    """Naive per-token recurrence — oracle for the chunked form (tests)."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+
+    def step(state, t):
+        x_t, a_t, dt_t, B_t, C_t = t
+        state = (state * a_t[:, :, None, None]
+                 + jnp.einsum("bhp,bn,bh->bhpn", x_t, B_t, dt_t))
+        y = jnp.einsum("bhpn,bn->bhp", state, C_t)
+        return state, y
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, state0,
+        (xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+         a.transpose(1, 0, 2).astype(jnp.float32),
+         dt.transpose(1, 0, 2).astype(jnp.float32),
+         Bm.transpose(1, 0, 2).astype(jnp.float32),
+         Cm.transpose(1, 0, 2).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2, 3)
+
+
+def ssm_apply(cfg, p, x, *, state=None):
+    """Mamba2 mixer. x (B,S,d). state: dict(ssm,conv) for decode or None.
+
+    Returns (out (B,S,d), new_state)."""
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    dt_ = x.dtype
+
+    zx = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xin = jnp.split(zx, 2, axis=-1)                    # gate, stream
+    xin = shard_constraint(xin, ("batch", None, "ffn_act"))
+
+    conv_tail = None if state is None else state["conv"]
+    xin, new_tail = _causal_conv(xin, p["conv_w"], conv_tail)
+    xin = jax.nn.silu(xin)
+
+    bc = jnp.einsum("bsd,dn->bsn", x, p["w_bc"])
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                    # (B,S,N)
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])           # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))                # (B,S,H)
+
+    xh = xin.reshape(B, S, H, P)
+
+    if state is None:
+        y, _ = _ssd_chunked(xh, a, dt, Bm, Cm, cfg.ssm_chunk)
+        new_state = None
+    else:
+        s0 = state["ssm"].astype(jnp.float32)             # (B,H,P,N)
+        s1 = (s0 * a[:, 0, :, None, None]
+              + jnp.einsum("bhp,bn,bh->bhpn",
+                           xh[:, 0].astype(jnp.float32),
+                           Bm[:, 0].astype(jnp.float32), dt[:, 0]))
+        y = jnp.einsum("bhpn,bn->bhp", s1, Cm[:, 0].astype(jnp.float32))[:, None]
+        new_state = {"ssm": s1.astype(state["ssm"].dtype), "conv": new_tail}
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = (y.reshape(B, S, d_in) * jax.nn.silu(z.astype(jnp.float32)))
+    out = jnp.einsum("bse,ed->bsd", y.astype(dt_), p["w_out"])
+    return out, new_state

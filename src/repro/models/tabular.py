@@ -1,0 +1,73 @@
+"""The paper's base experiment model (§VI-A-b): MLP over vertically
+partitioned tabular features.
+
+* M clients, each a single FC layer: c_m = relu(x_m @ W_m + b_m)
+  (client params stacked along a leading M axis so the async engine can
+  dynamically index the activated client inside ``lax.scan``).
+* server: two FC layers over the concatenation [c_1 .. c_M].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_mlp import PaperMLPConfig
+from repro.models.common import ParamSpec
+
+
+def param_specs(cfg: PaperMLPConfig):
+    f, e = cfg.features_per_client, cfg.client_embed
+    M, se, C = cfg.n_clients, cfg.server_embed, cfg.n_classes
+    return {
+        "clients": {
+            "w": ParamSpec((M, f, e), "float32", (None, None, None), "scaled"),
+            "b": ParamSpec((M, e), "float32", (None, None), "zeros"),
+        },
+        "server": {
+            "w1": ParamSpec((M * e, se), "float32", (None, None), "scaled"),
+            "b1": ParamSpec((se,), "float32", (None,), "zeros"),
+            "w2": ParamSpec((se, C), "float32", (None, None), "scaled"),
+            "b2": ParamSpec((C,), "float32", (None,), "zeros"),
+        },
+    }
+
+
+CLIENT_KEYS = ("clients",)
+
+
+def client_forward(client_m, x_m):
+    """client_m: {w (f,e), b (e)}; x_m (B, f) -> (B, e)."""
+    return jax.nn.relu(x_m @ client_m["w"] + client_m["b"])
+
+
+def all_clients_forward(clients, x_parts):
+    """clients stacked (M, ...), x_parts (M, B, f) -> (M, B, e)."""
+    return jax.vmap(client_forward)(clients, x_parts)
+
+
+def server_forward(server, c_all):
+    """c_all (M, B, e) -> logits (B, C)."""
+    M, B, e = c_all.shape
+    h = c_all.transpose(1, 0, 2).reshape(B, M * e)
+    h = jax.nn.relu(h @ server["w1"] + server["b1"])
+    return h @ server["w2"] + server["b2"]
+
+
+def xent(logits, labels):
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def global_loss(params, batch):
+    """Synchronous global loss (Split-Learning view of the same model)."""
+    x_parts, y = batch["x_parts"], batch["y"]
+    c = all_clients_forward(params["clients"], x_parts)
+    logits = server_forward(params["server"], c)
+    return xent(logits, y), {"logits": logits}
+
+
+def accuracy(params, x_parts, y):
+    c = all_clients_forward(params["clients"], x_parts)
+    logits = server_forward(params["server"], c)
+    return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))

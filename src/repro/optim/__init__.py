@@ -1,0 +1,5 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd
+from repro.optim.schedule import constant, cosine, make_schedule, warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "sgd", "constant", "cosine",
+           "make_schedule", "warmup_cosine"]

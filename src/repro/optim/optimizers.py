@@ -1,0 +1,104 @@
+"""Functional optimizers (no optax in the container — hand-rolled).
+
+The paper applies *vanilla SGD* to every framework ("To make a fair
+comparison, we applied the vanilla SGD strategy to all VFL frameworks"),
+so production configs default to SGD; AdamW is provided for ablations and
+small-scale runs. State and updates are pytree-structured and jit/pjit
+friendly; params may be bf16 with fp32 optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable      # params -> state
+    update: Callable    # (grads, state, params) -> (new_params, new_state)
+    name: str = "sgd"
+
+
+def _tree_zeros_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0,
+        grad_clip: float = 0.0) -> Optimizer:
+    """lr: float or schedule fn(step)->float."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mom"] = _tree_zeros_f32(params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"]
+        eta = lr_fn(step)
+        grads = _clip(grads, grad_clip)
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(jnp.float32),
+                grads, params)
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads)
+            upd = mom
+            new_state = {"step": step + 1, "mom": mom}
+        else:
+            upd = grads
+            new_state = {"step": step + 1}
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - eta * u).astype(p.dtype),
+            params, upd)
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tree_zeros_f32(params),
+                "v": _tree_zeros_f32(params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = lr_fn(step)
+        grads = _clip(grads, grad_clip)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def _clip(grads, clip: float):
+    if not clip:
+        return grads
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)

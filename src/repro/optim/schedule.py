@@ -1,0 +1,46 @@
+"""Learning-rate schedules (fn(step) -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return jnp.float32(lr) * (final_frac + (1 - final_frac)
+                                  * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        warm = jnp.float32(lr) * jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return fn
+
+
+def inv_sqrt(lr: float, warmup: int = 100):
+    """η = lr/√t — the paper's Corollary IV.10 choice (η = 1/√T)."""
+    def fn(step):
+        t = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return jnp.float32(lr) * jnp.minimum(t / warmup, jnp.sqrt(warmup / t))
+    return fn
+
+
+def make_schedule(name: str, lr: float, *, warmup: int = 0,
+                  total_steps: int = 0):
+    if name == "constant":
+        return constant(lr)
+    if name == "cosine":
+        return warmup_cosine(lr, warmup, total_steps) if warmup else \
+            cosine(lr, total_steps)
+    if name == "inv_sqrt":
+        return inv_sqrt(lr, max(warmup, 1))
+    raise ValueError(f"unknown schedule {name!r}")

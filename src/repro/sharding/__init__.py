@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    ACT_RULES,
+    PARAM_RULES,
+    Rules,
+    named_sharding,
+    resolve_spec,
+    shard_constraint,
+)
+
+__all__ = [
+    "ACT_RULES",
+    "PARAM_RULES",
+    "Rules",
+    "named_sharding",
+    "resolve_spec",
+    "shard_constraint",
+]

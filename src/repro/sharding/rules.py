@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Every tensor in the framework carries a tuple of *logical axis names*
+(one per dim, ``None`` = replicated). A :class:`Rules` table maps each
+logical name to an ordered list of candidate mesh-axis groups. For a given
+mesh, the first candidate whose (available) axes all divide the dim size
+and are not already taken by another dim wins; otherwise the dim is
+replicated. This single mechanism makes all 10 assigned architectures —
+with their wildly different head counts / vocab sizes / expert counts —
+shard on the production mesh without per-arch special cases (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisGroup = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: dict
+
+    def candidates(self, logical: str) -> Tuple[AxisGroup, ...]:
+        return tuple(self.table.get(logical, ()))
+
+
+# Parameter sharding: tensor-parallel over "model", FSDP over "data",
+# vocab over "model" (padded to 256 so it always divides).
+PARAM_RULES = Rules({
+    "vocab":      ("model",),
+    "embed":      ("data",),             # FSDP
+    "heads_out":  ("model", "data"),     # fused (H*hd) projection outputs
+    "kv_out":     ("model", "data"),
+    "ffn":        ("model",),
+    "ffn_in":     ("data",),
+    "experts":    ("model",),
+    "expert_d":   ("data",),
+    "latent":     ("model", "data"),     # MLA lora ranks
+    "ssm_inner":  ("model",),
+    "ssm_state":  (),
+    "pos":        (),
+    "layers":     (),
+    "frontend":   ("data",),
+})
+
+# §Perf variant: tensor/expert-parallel only — no FSDP over "data". For
+# models whose (params/model_axis) fits HBM (<~30B bf16 at 16-way TP) this
+# removes every per-layer weight all-gather; weights are replicated across
+# the data axis. (DeepSeek-671B still needs FSDP.)
+PARAM_RULES_NO_FSDP = Rules({
+    **{k: tuple(a for a in v if a != "data")
+       for k, v in PARAM_RULES.table.items()},
+    "embed": (),
+    "ffn_in": (),
+    "expert_d": (),
+    "frontend": (),
+})
+
+# Activation sharding: batch over (pod, data), heads/ffn over "model".
+ACT_RULES = Rules({
+    "batch":      (("pod", "data"), "data"),
+    "seq":        (),
+    # sequence-parallel residual boundaries: the saved (remat) block inputs
+    # are sharded over "model" along seq — 16× smaller checkpoints; decode
+    # (S=1) falls back to replicated automatically via divisibility.
+    "seq_act":    ("model",),
+    "embed_act":  (),
+    "heads_act":  ("model",),
+    "kv_heads":   ("model",),
+    "ffn_act":    ("model",),
+    "experts":    ("model",),
+    "vocab_act":  ("model",),
+    # decode KV caches: batch -> (pod,data); the cache sequence dim takes
+    # whatever remains ("model"; for long_500k batch=1 it takes
+    # ("data","model") = 256-way). Head-sharded decode is a §Perf variant.
+    "cache_batch":   (("pod", "data"), "data"),
+    "cache_seq":     (("pod", "data", "model"), ("data", "model"), "model"),
+    "cache_heads":   ("model",),
+})
+
+
+def _group_axes(group: AxisGroup) -> Tuple[str, ...]:
+    return (group,) if isinstance(group, str) else tuple(group)
+
+
+def _available(group: AxisGroup, mesh: Mesh) -> Tuple[str, ...]:
+    """Filter a candidate group down to axes present in the mesh
+    (a ("pod","data") candidate degrades to ("data",) on single-pod)."""
+    return tuple(a for a in _group_axes(group) if a in mesh.shape)
+
+
+def resolve_spec(
+    mesh: Mesh,
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    rules: Rules,
+) -> P:
+    """Build a PartitionSpec for ``shape`` given per-dim logical names."""
+    assert len(shape) == len(logical), (shape, logical)
+    taken: set = set()
+    entries = []
+    for size, name in zip(shape, logical):
+        if name is None:
+            entries.append(None)
+            continue
+        chosen = None
+        for cand in Rules.candidates(rules, name):
+            axes = _available(cand, mesh)
+            if not axes or any(a in taken for a in axes):
+                continue
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if size % prod == 0 and prod > 1:
+                chosen = axes
+                break
+        if chosen is None:
+            entries.append(None)
+        else:
+            taken.update(chosen)
+            entries.append(chosen if len(chosen) > 1 else chosen[0])
+    # trim trailing Nones for a tidy spec
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def named_sharding(
+    mesh: Mesh,
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    rules: Rules = ACT_RULES,
+) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(mesh, shape, logical, rules))
+
+
+def shard_constraint(x, logical: Sequence[Optional[str]], rules: Rules = ACT_RULES):
+    """with_sharding_constraint if tracing inside a mesh context, else id."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_spec(mesh, x.shape, logical, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            return am
+    except Exception:
+        pass
+    try:
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from jax.interpreters.pxla import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None

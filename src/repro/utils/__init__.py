@@ -1,0 +1,3 @@
+from repro.utils.hlo import collective_bytes, parse_collectives
+
+__all__ = ["collective_bytes", "parse_collectives"]

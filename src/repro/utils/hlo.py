@@ -1,0 +1,81 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled (or lowered) HLO text and sum the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Shapes in HLO look like ``bf16[16,512,128]{2,1,0}``; we parse dtype + dims.
+Per-op byte conventions (per participating device):
+  all-gather        : output_bytes (data received)
+  all-reduce        : 2 × operand_bytes (ring: reduce-scatter + all-gather)
+  reduce-scatter    : operand_bytes
+  all-to-all        : operand_bytes
+  collective-permute: operand_bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# op name at the start of an HLO instruction: `%x = bf16[..] all-gather(...)`
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9\[\],{}\s*\.]*?)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> List[Tuple[str, int]]:
+    """Returns [(op_kind, bytes)] for every collective in the module."""
+    out: List[Tuple[str, int]] = []
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2).lower()
+        if "-done(" in line:        # avoid double counting start/done pairs
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        if nbytes == 0:
+            # fall back: use the full line's first shape
+            sm = _SHAPE_RE.search(line)
+            nbytes = _shape_bytes(line[:line.find("(")]) if sm else 0
+        out.append((kind, nbytes))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Aggregate per-device collective traffic by kind + 'total' (with the
+    all-reduce 2× convention applied)."""
+    agg: Dict[str, int] = {}
+    total = 0
+    for kind, nbytes in parse_collectives(hlo_text):
+        mult = 2 if kind == "all-reduce" else 1
+        agg[kind] = agg.get(kind, 0) + nbytes * mult
+        total += nbytes * mult
+    agg["total"] = total
+    return agg

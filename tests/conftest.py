@@ -1,0 +1,27 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS device-count override here —
+smoke tests and benches must see the real single CPU device (the dry-run
+sets its own flags in its own process)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)
+
+
+def tiny_batch(cfg, B=2, S=16, key=None):
+    """Inputs for any family's reduced config."""
+    key = key if key is not None else jax.random.key(7)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["tokens"] = toks[:, : S - cfg.n_vision_tokens]
+        batch["labels"] = batch["tokens"]
+        batch["patch_embeds"] = jnp.ones(
+            (B, cfg.n_vision_tokens, cfg.frontend_dim), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.ones((B, cfg.encoder_seq, cfg.frontend_dim),
+                                   jnp.bfloat16)
+    return batch

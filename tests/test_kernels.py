@@ -1,0 +1,101 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True
+on CPU — the kernel body itself is executed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_chunk.ops import ssd_chunk
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+from repro.kernels.zoo_dual_matmul.ops import zoo_dual_matmul
+from repro.kernels.zoo_dual_matmul.ref import zoo_dual_matmul_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BH,S,d", [(2, 128, 64), (4, 256, 64), (1, 256, 128)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(BH, S, d, dtype, causal, window):
+    ks = jax.random.split(jax.random.key(S + d), 3)
+    q, k, v = [jax.random.normal(ks[i], (BH, S, d), dtype) for i in range(3)]
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_cross_lengths():
+    """Sq != Skv (cross/prefix attention, non-causal)."""
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (2, 128, 64))
+    k = jax.random.normal(ks[1], (2, 256, 64))
+    v = jax.random.normal(ks[2], (2, 256, 64))
+    out = flash_attention(q, k, v, causal=False, bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,d", [(128, 256), (256, 512), (64, 1024)])
+def test_rmsnorm_sweep(M, d, dtype):
+    x = jax.random.normal(jax.random.key(M), (M, d), dtype)
+    sc = jax.random.normal(jax.random.key(d), (d,), jnp.float32)
+    out = rmsnorm(x, sc, bm=64)
+    ref = rmsnorm_ref(x, sc)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N", [(128, 256, 128), (256, 128, 256),
+                                   (64, 512, 384)])
+def test_zoo_dual_matmul_sweep(M, K, N, dtype):
+    ks = jax.random.split(jax.random.key(M + K + N), 3)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    w = jax.random.normal(ks[1], (K, N), dtype)
+    u = jax.random.normal(ks[2], (K, N), dtype)
+    mu = 1e-2
+    y, y_hat = zoo_dual_matmul(x, w, u, mu, bm=64, bn=64)
+    ry, ry_hat = zoo_dual_matmul_ref(x, w, u, mu)
+    tol = 1e-4 if dtype == jnp.float32 else 1.5e-1
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ry, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(y_hat, np.float32),
+                               np.asarray(ry_hat, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BH,S,P,N,chunk", [(2, 64, 32, 16, 16),
+                                            (3, 128, 32, 16, 32),
+                                            (1, 128, 64, 32, 64)])
+def test_ssd_chunk_kernel_sweep(BH, S, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.key(S + P), 5)
+    xh = (jax.random.normal(ks[0], (BH, S, P)) * 0.5).astype(dtype)
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (BH, S))) * 0.9 + 0.05
+    dt = jax.nn.softplus(jax.random.normal(ks[2], (BH, S)))
+    bm = (jax.random.normal(ks[3], (BH, S, N)) * 0.5).astype(dtype)
+    cm = (jax.random.normal(ks[4], (BH, S, N)) * 0.5).astype(dtype)
+    y = ssd_chunk(xh, a, dt, bm, cm, chunk=chunk)
+    r = ssd_chunk_ref(xh, a, dt, bm, cm)
+    tol = 1e-4 if dtype == jnp.float32 else 1.5e-1
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_zoo_dual_matmul_perturbation_direction():
+    """(ŷ − y)/μ must equal x@u — the quantity the ZOO estimator needs."""
+    ks = jax.random.split(jax.random.key(9), 3)
+    x = jax.random.normal(ks[0], (128, 128))
+    w = jax.random.normal(ks[1], (128, 128))
+    u = jax.random.normal(ks[2], (128, 128))
+    y, y_hat = zoo_dual_matmul(x, w, u, 1e-3)
+    np.testing.assert_allclose(np.asarray((y_hat - y) / 1e-3),
+                               np.asarray(x @ u), atol=1e-2, rtol=1e-2)

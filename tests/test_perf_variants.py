@@ -1,0 +1,74 @@
+"""§Perf variants must be numerically equivalent to the baseline paths —
+an optimization that changes the math is a bug, not a speedup."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, get_config, reduced
+from repro.models import common, model_api
+from repro.models.layers import embed_lookup
+
+
+def _zero_caches(model, B, S):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        model.cache_specs(ShapeConfig("t", S, B, "decode")),
+        is_leaf=lambda x: hasattr(x, "logical"))
+
+
+def test_iota_embed_equals_gather():
+    table = {"table": jax.random.normal(jax.random.key(0), (64, 16))}
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 0, 64)
+    a = embed_lookup(table, toks, iota=False)
+    b = embed_lookup(table, toks, iota=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("flag", ["iota_embed", "rs_outputs"])
+def test_train_variants_match_baseline_loss(flag):
+    base = reduced(get_config("phi3-mini-3.8b"), remat=False)
+    opt = dataclasses.replace(base, **{flag: True})
+    m0 = model_api.build_model(base, max_seq=32)
+    m1 = model_api.build_model(opt, max_seq=32)
+    params = common.materialize(m0.param_specs, jax.random.key(2))
+    toks = jax.random.randint(jax.random.key(3), (2, 16), 0, base.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    l0 = float(m0.loss_fn(params, batch)[0])
+    l1 = float(m1.loss_fn(params, batch)[0])
+    assert abs(l0 - l1) < 2e-2, (l0, l1)
+
+
+def test_mla_absorb_matches_expanded_decode():
+    base = reduced(get_config("deepseek-v3-671b"), remat=False,
+                   param_dtype="float32", dtype="float32")
+    outs = {}
+    for absorb in (False, True):
+        cfg = dataclasses.replace(base, mla_absorb=absorb)
+        m = model_api.build_model(cfg, max_seq=16)
+        params = common.materialize(m.param_specs, jax.random.key(4))
+        toks = jax.random.randint(jax.random.key(5), (2, 8), 0,
+                                  cfg.vocab_size)
+        caches = _zero_caches(m, 2, 8)
+        dec = jax.jit(m.decode_fn)
+        for t in range(8):
+            logits, caches = dec(params, {"tokens": toks[:, t:t + 1]},
+                                 caches, t)
+        outs[absorb] = np.asarray(logits[:, 0], np.float32)
+    np.testing.assert_allclose(outs[False], outs[True], atol=2e-3, rtol=1e-3)
+
+
+def test_window_gather_matches_masked_decode():
+    from repro.models.attention import decode_attend
+    ks = jax.random.split(jax.random.key(6), 3)
+    B, S, H, hd = 2, 32, 4, 16
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kc = jax.random.normal(ks[1], (B, S, H, hd))
+    vc = jax.random.normal(ks[2], (B, S, H, hd))
+    for cur in (7, 15, 31):
+        a = decode_attend(q, kc, vc, cur, window=8, window_gather=False)
+        b = decode_attend(q, kc, vc, cur, window=8, window_gather=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)

@@ -1,0 +1,144 @@
+"""Optimizers, schedules, checkpointing, data pipeline, HLO parser."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data import lm_token_batches, make_classification, vertical_partition
+from repro.optim import adamw, sgd
+from repro.optim.schedule import inv_sqrt, make_schedule, warmup_cosine
+from repro.utils.hlo import collective_bytes, parse_collectives
+
+
+# ------------------------------------------------------------ optimizers --
+
+def test_sgd_quadratic_converges():
+    opt = sgd(0.3)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(60):
+        grads = {"w": params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-4
+
+
+def test_sgd_momentum_faster_on_illconditioned():
+    def run(opt):
+        params = {"w": jnp.asarray([5.0, 5.0])}
+        state = opt.init(params)
+        H = jnp.asarray([1.0, 0.01])
+        for _ in range(100):
+            params, state = opt.update({"w": H * params["w"]}, state, params)
+        return float(jnp.sum(jnp.abs(params["w"])))
+    assert run(sgd(0.5, momentum=0.9)) < run(sgd(0.5))
+
+
+def test_adamw_converges_and_decays():
+    opt = adamw(0.1, weight_decay=0.1)
+    params = {"w": jnp.asarray([4.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        params, state = opt.update({"w": params["w"] - 1.0}, state, params)
+    # fixed point: grad + wd*w = 0 -> w ~= 1/(1+wd·...) < 1
+    assert 0.5 < float(params["w"][0]) < 1.0
+
+
+def test_grad_clip():
+    opt = sgd(1.0, grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    params, _ = opt.update({"w": jnp.full(4, 100.0)}, state, params)
+    assert abs(float(jnp.linalg.norm(params["w"])) - 1.0) < 1e-4
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, 10, 110)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(110)) < 0.2
+    s2 = inv_sqrt(1.0, warmup=4)
+    assert float(s2(jnp.asarray(1))) < float(s2(jnp.asarray(4)))
+    assert float(s2(jnp.asarray(100))) < float(s2(jnp.asarray(25)))
+    with pytest.raises(ValueError):
+        make_schedule("nope", 1.0)
+
+
+# ------------------------------------------------------------ checkpoint --
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"a": {"b": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+              "c": jnp.asarray([1, 2], jnp.int32)}
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, params, step=42, metadata={"note": "hi"})
+    loaded, step = load_checkpoint(path, params)
+    assert step == 42
+    np.testing.assert_array_equal(np.asarray(loaded["a"]["b"]),
+                                  np.asarray(params["a"]["b"]))
+    assert loaded["c"].dtype == jnp.int32
+
+
+# ------------------------------------------------------------------ data --
+
+def test_vertical_partition_disjoint_and_complete():
+    X, y = make_classification(0, 64, 32, 4)
+    Xp = vertical_partition(X, 4)
+    assert Xp.shape == (4, 64, 8)
+    np.testing.assert_array_equal(np.concatenate(list(Xp), axis=1), X)
+
+
+def test_classification_learnable():
+    """A linear probe should beat chance easily on the synthetic task."""
+    X, y = make_classification(1, 1000, 32, 4, sep=3.0)
+    # one ridge-regression step as a cheap probe
+    Y = np.eye(4)[y]
+    W = np.linalg.lstsq(X, Y, rcond=None)[0]
+    acc = np.mean(np.argmax(X @ W, -1) == y)
+    assert acc > 0.8, acc
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_generator_deterministic(seed):
+    a = next(lm_token_batches(seed, 100, 2, 16))
+    b = next(lm_token_batches(seed, 100, 2, 16))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_lm_tokens_in_range():
+    batch = next(lm_token_batches(0, 257, 4, 64))
+    assert batch["tokens"].min() >= 0
+    assert batch["tokens"].max() < 257
+
+
+# ------------------------------------------------------------- HLO parse --
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p = bf16[16,128]{1,0} parameter(0)
+  %ag = bf16[256,128]{1,0} all-gather(%p), replica_groups={}
+  %ar = f32[64,64]{1,0} all-reduce(%x), to_apply=%add
+  %rs = bf16[4,128]{1,0} reduce-scatter(%ag), dimensions={0}
+  %a2a = bf16[16,128]{1,0} all-to-all(%p), dimensions={0}
+  %cp = s32[8]{0} collective-permute(%idx), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_parse_collectives_kinds():
+    got = dict((k, b) for k, b in parse_collectives(HLO_SAMPLE))
+    assert set(got) == {"all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"}
+    assert got["all-gather"] == 256 * 128 * 2
+    assert got["all-reduce"] == 64 * 64 * 4
+
+
+def test_collective_bytes_allreduce_doubled():
+    agg = collective_bytes(HLO_SAMPLE)
+    assert agg["all-reduce"] == 2 * 64 * 64 * 4
+    assert agg["total"] == (256 * 128 * 2 + 2 * 64 * 64 * 4 + 4 * 128 * 2
+                            + 16 * 128 * 2 + 8 * 4)

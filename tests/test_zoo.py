@@ -1,0 +1,100 @@
+"""ZOO estimator unit + statistical tests (paper Eq. 2/3, Lemma A.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import zoo
+from repro.core.partition import tree_dim
+
+
+def quad_loss(w):
+    """Simple smooth loss with known gradient."""
+    return 0.5 * jnp.sum(jnp.square(w["a"])) + jnp.sum(w["b"] * w["a"][:3])
+
+
+def test_phi_factor():
+    assert float(zoo.phi_factor("normal", 10)) == 1.0
+    assert float(zoo.phi_factor("sphere", 10)) == 10.0
+    with pytest.raises(ValueError):
+        zoo.phi_factor("cauchy", 3)
+
+
+def test_sphere_direction_unit_norm(rng_key):
+    tree = {"a": jnp.zeros(17), "b": jnp.zeros((3, 5))}
+    u, d = zoo.sample_direction(rng_key, tree, "sphere")
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(u)))
+    assert abs(float(norm) - 1.0) < 1e-5
+    assert int(d) == 17 + 15
+
+
+def test_perturb_roundtrip(rng_key):
+    tree = {"a": jnp.ones(4), "b": jnp.full((2, 2), 2.0)}
+    u, _ = zoo.sample_direction(rng_key, tree, "normal")
+    pert = zoo.perturb(tree, u, 0.5)
+    back = zoo.perturb(pert, u, -0.5)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+@pytest.mark.parametrize("dist", ["sphere", "normal"])
+def test_two_point_estimator_unbiased_direction(dist):
+    """E[∇̂f] ≈ ∇f_mu ≈ ∇f for small mu (Lemma A.1 Eq. 5): the averaged
+    estimator over many directions must align with the true gradient."""
+    w = {"a": jnp.asarray(np.linspace(-1, 1, 8), jnp.float32),
+         "b": jnp.asarray(np.ones(3), jnp.float32)}
+    true_grad = jax.grad(quad_loss)(w)
+    est = None
+    n = 3000
+    keys = jax.random.split(jax.random.key(1), n)
+
+    @jax.jit
+    def one(k):
+        g, _, _ = zoo.zoo_gradient(k, quad_loss, w, mu=1e-4, dist=dist)
+        return g
+    gs = jax.vmap(one)(keys)
+    est = jax.tree.map(lambda g: jnp.mean(g, 0), gs)
+
+    tg = jnp.concatenate([x.ravel() for x in jax.tree.leaves(true_grad)])
+    eg = jnp.concatenate([x.ravel() for x in jax.tree.leaves(est)])
+    cos = jnp.dot(tg, eg) / (jnp.linalg.norm(tg) * jnp.linalg.norm(eg))
+    assert float(cos) > 0.95, float(cos)
+    # magnitude within 25% (finite-sample)
+    assert 0.75 < float(jnp.linalg.norm(eg) / jnp.linalg.norm(tg)) < 1.25
+
+
+def test_multi_query_reduces_variance():
+    w = {"a": jnp.ones(16)}
+    keys = jax.random.split(jax.random.key(3), 300)
+
+    def est_norm(q):
+        @jax.jit
+        def one(k):
+            g, _, _ = zoo.zoo_gradient(k, quad_loss_a, w, 1e-4, "sphere",
+                                       n_queries=q)
+            return g["a"]
+        gs = jax.vmap(one)(keys)
+        return float(jnp.mean(jnp.var(gs, axis=0)))
+
+    def quad_loss_a(w):
+        return 0.5 * jnp.sum(jnp.square(w["a"]))
+
+    v1, v4 = est_norm(1), est_norm(4)
+    assert v4 < v1 * 0.5, (v1, v4)
+
+
+def test_active_row_mask():
+    toks = jnp.asarray([[1, 2], [2, 3]])
+    m = zoo.embedding_row_mask(toks, 8)
+    np.testing.assert_array_equal(np.asarray(m),
+                                  [0, 1, 1, 1, 0, 0, 0, 0])
+
+
+def test_row_masked_direction_zeroes_inactive(rng_key):
+    tree = {"emb": jnp.zeros((8, 4))}
+    mask = {"emb": jnp.asarray([1., 0, 1, 0, 0, 0, 0, 0])}
+    u, d_eff = zoo.sample_direction(rng_key, tree, "sphere", mask)
+    uu = np.asarray(u["emb"])
+    assert np.all(uu[1] == 0) and np.all(uu[3:] == 0)
+    assert np.any(uu[0] != 0) and np.any(uu[2] != 0)
+    assert int(d_eff) == 2 * 4
