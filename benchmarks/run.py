@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
   bench_large_model         — Fig 5b/c (split LM at laptop scale)
   bench_wire                — §II communication efficiency (bytes/round)
   bench_kernels             — kernel microbench (XLA-path oracle timing)
+  bench_zoo_fanout          — stacked vs unrolled ZOO fan-out, q ∈ {1,4,16}
   bench_roofline            — §Roofline terms from the dry-run artifacts
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
@@ -191,6 +192,13 @@ def bench_kernels(fast: bool):
     row("ssd_chunk_ref", us, f"tokens_per_s={BH * S / us * 1e6:.0f}")
 
 
+# ==================================================== ZOO fan-out ==========
+
+def bench_zoo_fanout(fast: bool):
+    from benchmarks.zoo_fanout import bench_zoo_fanout as bench
+    bench(fast, row=row)
+
+
 # ======================================================== roofline =========
 
 def bench_roofline(fast: bool):
@@ -222,6 +230,7 @@ BENCHES = {
     "large_model": bench_large_model,
     "wire": bench_wire,
     "kernels": bench_kernels,
+    "zoo_fanout": bench_zoo_fanout,
     "roofline": bench_roofline,
 }
 

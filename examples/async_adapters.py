@@ -1,0 +1,70 @@
+"""Async engine beyond the paper's tabular MLP: model adapters, block
+activation, and the fused ZOO fan-out.
+
+Three runs over the same vertically partitioned data:
+  1. the paper's tabular model, one client per round (baseline protocol)
+  2. the SAME protocol driving a SwiGLU-MLP client/server pair — the
+     engine only sees the ModelAdapter, not the model family
+  3. tabular again with block_size=3 — three concurrent client
+     activations per round (vmapped), the many-client scaling mode —
+     and the client fan-out routed through the fused dual-pass lanes.
+
+    PYTHONPATH=src python examples/async_adapters.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import VFLConfig
+from repro.configs.paper_mlp import PaperMLPConfig
+from repro.core import async_engine
+from repro.core.adapters import mlp_adapter, tabular_adapter
+from repro.data import make_classification, vertical_partition
+from repro.models import common, tabular
+
+
+def main():
+    M, f, c = 4, 64, 10
+    cfg = PaperMLPConfig(n_features=f, n_classes=c, n_clients=M,
+                         client_embed=32, server_embed=128)
+    X, y = make_classification(seed=0, n=2048, n_features=f, n_classes=c)
+    Xp = jnp.asarray(vertical_partition(X, M))
+    y = jnp.asarray(y)
+    vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=0.05, zoo_queries=4)
+
+    # 1 — paper tabular, one activation per round
+    params = common.materialize(tabular.param_specs(cfg), jax.random.key(0))
+    res = async_engine.run(
+        async_engine.EngineConfig(method="cascaded", steps=600,
+                                  batch_size=64),
+        vfl, params, Xp, y)
+    acc = float(tabular.accuracy(res.params, Xp, y))
+    print(f"tabular  block=1 : loss {res.losses[-25:].mean():.4f} "
+          f"acc {acc:.3f}  mean_delay {res.mean_delay:.1f}")
+
+    # 2 — same protocol, SwiGLU-MLP client/server pair via the adapter
+    ad = mlp_adapter(n_clients=M, features=f, client_embed=32, d_ff=64,
+                     server_embed=128, n_classes=c)
+    res_m = async_engine.run(
+        async_engine.EngineConfig(method="cascaded", steps=600,
+                                  batch_size=64),
+        vfl, ad.init_params(jax.random.key(1)), Xp, y, adapter=ad)
+    print(f"swiglu   block=1 : loss {res_m.losses[-25:].mean():.4f} "
+          f"(first {res_m.losses[:25].mean():.4f})")
+
+    # 3 — block activation + fused dual-pass lanes (stacked ZOO fan-out)
+    res_b = async_engine.run(
+        async_engine.EngineConfig(method="cascaded", steps=200,
+                                  batch_size=64, block_size=3,
+                                  use_lanes=True),
+        vfl, params, Xp, y, adapter=tabular_adapter(cfg))
+    acc_b = float(tabular.accuracy(res_b.params, Xp, y))
+    print(f"tabular  block=3 : loss {res_b.losses[-25:].mean():.4f} "
+          f"acc {acc_b:.3f}  mean_delay {res_b.mean_delay:.1f}")
+
+    assert np.isfinite(res.losses).all() and np.isfinite(res_m.losses).all()
+    assert res_b.mean_delay < res.mean_delay  # 3/4 clients fresh per round
+
+
+if __name__ == "__main__":
+    main()

@@ -241,9 +241,14 @@ class VFLConfig:
     # learning rates (paper tunes server/client separately)
     lr_server: float = 0.01
     lr_client: float = 0.01
-    # §Perf: run the clean+perturbed forwards as ONE vmapped server pass so
-    # FSDP weight all-gathers happen once instead of twice per step
-    fused_dual: bool = False
+    # §Perf: the clean + q perturbed forwards run as ONE vmapped server
+    # pass over stacked lanes (FSDP weight all-gathers happen once instead
+    # of 1+q times; compile time constant in q). False selects the unrolled
+    # per-query oracle — test-only numerical reference, never production.
+    fused_dual: bool = True
+    # test-only: route zoo_gradient through the original per-query Python
+    # loop instead of the vectorized lane stack (oracle for equality tests)
+    zoo_unrolled_oracle: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

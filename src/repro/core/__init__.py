@@ -1,4 +1,5 @@
 """The paper's contribution: cascaded hybrid optimization for async VFL."""
+from repro.core.adapters import ModelAdapter, mlp_adapter, tabular_adapter
 from repro.core.cascade import (
     StepOutput,
     make_cascaded_step,
@@ -8,25 +9,34 @@ from repro.core.cascade import (
 )
 from repro.core.partition import merge_params, split_params, tree_dim
 from repro.core.zoo import (
+    grad_from_losses,
     phi_factor,
     perturb,
     sample_direction,
+    sample_directions,
+    stack_lanes,
     two_point_grad,
     zoo_gradient,
 )
 
 __all__ = [
+    "ModelAdapter",
     "StepOutput",
+    "grad_from_losses",
     "make_cascaded_step",
     "make_foo_step",
     "make_full_zoo_step",
     "make_step_for_method",
     "merge_params",
+    "mlp_adapter",
     "split_params",
+    "tabular_adapter",
     "tree_dim",
     "phi_factor",
     "perturb",
     "sample_direction",
+    "sample_directions",
+    "stack_lanes",
     "two_point_grad",
     "zoo_gradient",
 ]

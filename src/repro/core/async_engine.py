@@ -1,14 +1,25 @@
 """Asynchronous VFL engine (paper §III-C / Alg. 1) — host-level protocol
-simulation with exact staleness semantics, compiled as one ``lax.scan``.
+simulation with exact staleness semantics, compiled as one jitted
+``lax.scan``.
 
 Per global round t (matching Fig. 2):
-  * client m_t is activated (schedule drawn from p_m, assumption IV.6)
-  * it picks a sample batch i_t, computes c/ĉ and "uploads" them
+  * a block of clients {m_t} is activated (schedule drawn from p_m,
+    assumption IV.6; ``block_size=1`` recovers the paper's one-client
+    rounds, larger blocks vmap several concurrent activations per round
+    for many-client scaling studies)
+  * each picks a sample batch i_t, computes c/ĉ and "uploads" them
   * the server evaluates h/ĥ against its *embedding table* — the latest
     (stale, delay τ_{i,m}) embeddings of all other clients (assumption IV.7)
   * the server does one local FOO step (ours/VAFL) or ZOO step (ZOO-VFL)
-  * the client does one ZOO step (ours/ZOO-VFL) or FOO step (VAFL)
-  * the table row (m_t, i_t) is refreshed; delay counters update per §III-C
+  * each activated client does one ZOO step (ours/ZOO-VFL) or FOO step
+    (VAFL); concurrent clients see each other's STALE embeddings only
+  * table rows (m, i_t) refresh; delay counters update per §III-C
+
+The model plane is abstracted behind :class:`repro.core.adapters.ModelAdapter`,
+so the same scan body drives arbitrary ``repro.models`` client/server
+pairs — not just the paper's tabular MLP. The scan body is jitted once per
+(adapter, method, vfl, block) and cached, so repeated runs (benchmark
+sweeps) skip retracing.
 
 Synchronous baselines (Split-Learning, Syn-ZOO-VFL) activate *all* clients
 every round with fresh embeddings (no table staleness).
@@ -16,7 +27,8 @@ every round with fresh embeddings (no table staleness).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +36,9 @@ import numpy as np
 
 from repro.configs.base import VFLConfig
 from repro.core import zoo
-from repro.models import tabular
+from repro.core.adapters import ModelAdapter, tabular_adapter
+
+SYNC_METHODS = ("split", "syn-zoo")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +47,12 @@ class EngineConfig:
     steps: int = 1000
     batch_size: int = 64
     seed: int = 0
+    # >1 activates several clients per round (drawn without replacement)
+    # and runs their updates as one vmapped block
+    block_size: int = 1
+    # route the client's clean+perturbed fan-out through the adapter's
+    # fused lanes hook (e.g. the zoo_dual_matmul Pallas kernel)
+    use_lanes: bool = False
 
 
 @dataclasses.dataclass
@@ -44,46 +64,58 @@ class EngineResult:
 
 
 def make_schedule(key, steps: int, n_clients: int,
-                  probs: Optional[Tuple[float, ...]] = None):
-    """Activation sequence m_t — independent draws (assumption IV.6)."""
+                  probs: Optional[Tuple[float, ...]] = None,
+                  block_size: int = 1):
+    """Activation sequence m_t — independent draws (assumption IV.6).
+
+    block_size > 1 draws that many DISTINCT clients per round; returns
+    (steps,) for block_size == 1, else (steps, block_size)."""
     p = (jnp.ones(n_clients) / n_clients if probs is None
          else jnp.asarray(probs))
-    return jax.random.choice(key, n_clients, (steps,), p=p)
+    if block_size == 1:
+        return jax.random.choice(key, n_clients, (steps,), p=p)
+    keys = jax.random.split(key, steps)
+    return jax.vmap(
+        lambda k: jax.random.choice(k, n_clients, (block_size,),
+                                    replace=False, p=p))(keys)
 
 
 def run(cfg_engine: EngineConfig, vfl: VFLConfig, params, x_parts, y,
-        *, probs=None) -> EngineResult:
+        *, probs=None, adapter: Optional[ModelAdapter] = None) -> EngineResult:
     """x_parts: (M, n, f) vertically partitioned features; y: (n,) labels."""
+    adapter = adapter if adapter is not None else tabular_adapter()
     M, n, f = x_parts.shape
     T, bs = cfg_engine.steps, cfg_engine.batch_size
+    sync = cfg_engine.method in SYNC_METHODS
+    if sync and cfg_engine.use_lanes:
+        raise ValueError(
+            f"use_lanes only applies to asynchronous ZOO-client methods, "
+            f"not {cfg_engine.method!r} (the sync step has no per-client "
+            "fan-out to route through the fused kernel)")
+    if sync and cfg_engine.block_size != 1:
+        raise ValueError(
+            f"block_size={cfg_engine.block_size} has no meaning for the "
+            f"synchronous method {cfg_engine.method!r} (every client is "
+            "activated every round)")
+    block = 1 if sync else cfg_engine.block_size
     key = jax.random.key(cfg_engine.seed)
     k_sched, k_idx, k_zoo = jax.random.split(key, 3)
 
-    schedule = make_schedule(k_sched, T, M, probs)
+    schedule = make_schedule(k_sched, T, M, probs, block)
+    if schedule.ndim == 1:
+        schedule = schedule[:, None]                     # (T, 1)
     sample_idx = jax.random.randint(k_idx, (T, bs), 0, n)
     zoo_keys = jax.random.split(k_zoo, T)
 
-    e = params["clients"]["b"].shape[-1]
     # server-side table of latest client embeddings per sample (Fig. 2)
-    table0 = tabular.all_clients_forward(params["clients"],
-                                         x_parts)          # (M, n, e)
+    table0 = jax.vmap(adapter.client_forward)(params["clients"],
+                                              x_parts)   # (M, n, e)
     delays0 = jnp.zeros((M, n), jnp.int32)
 
-    sync = cfg_engine.method in ("split", "syn-zoo")
-    step_fn = _make_async_step(cfg_engine.method, vfl, x_parts, y) \
-        if not sync else _make_sync_step(cfg_engine.method, vfl, x_parts, y)
-
-    def body(carry, t_in):
-        params, table, delays = carry
-        m_t, idx, k = t_in
-        params, table, loss = step_fn(params, table, m_t, idx, k)
-        # delay bookkeeping (§III-C): activated (m,i) resets, others +1
-        delays = delays + 1
-        delays = delays.at[m_t, idx].set(0) if not sync else delays * 0
-        return (params, table, delays), (loss, jnp.max(delays))
-
-    (params, table, delays), (losses, maxd) = jax.lax.scan(
-        body, (params, table0, delays0), (schedule, sample_idx, zoo_keys))
+    runner = _make_runner(adapter, cfg_engine.method, vfl, sync, block,
+                          cfg_engine.use_lanes)
+    (params, table, delays), (losses, maxd) = runner(
+        params, table0, delays0, schedule, sample_idx, zoo_keys, x_parts, y)
 
     return EngineResult(params=params, losses=np.asarray(losses),
                         max_delay_seen=int(jnp.max(maxd)),
@@ -92,86 +124,144 @@ def run(cfg_engine: EngineConfig, vfl: VFLConfig, params, x_parts, y,
 
 # ------------------------------------------------------------------------
 
-def _make_async_step(method: str, vfl: VFLConfig, x_parts, y):
-    """One asynchronous round for the activated client m_t."""
+@functools.lru_cache(maxsize=64)
+def _make_runner(adapter: ModelAdapter, method: str, vfl: VFLConfig,
+                 sync: bool, block: int, use_lanes: bool):
+    """Build + jit the full scan for one (adapter, method, vfl, block).
 
-    def server_loss_fn(server, c_batch, yb):
-        logits = tabular.server_forward(server, c_batch)
-        return tabular.xent(logits, yb)
+    lru-cached so benchmark sweeps that re-enter ``run`` with the same
+    protocol reuse the compiled executable instead of retracing."""
+    step_fn = (_make_sync_step(adapter, method, vfl) if sync
+               else _make_async_step(adapter, method, vfl, use_lanes))
 
-    def step(params, table, m_t, idx, key):
+    def scan_all(params, table0, delays0, schedule, sample_idx, zoo_keys,
+                 x_parts, y):
+        def body(carry, t_in):
+            params, table, delays = carry
+            m_blk, idx, k = t_in
+            params, table, loss = step_fn(params, table, m_blk, idx, k,
+                                          x_parts, y)
+            # delay bookkeeping (§III-C): activated (m,i) resets, others +1
+            delays = delays + 1
+            if sync:
+                delays = delays * 0
+            else:
+                delays = delays.at[m_blk[:, None], idx[None, :]].set(0)
+            return (params, table, delays), (loss, jnp.max(delays))
+
+        return jax.lax.scan(body, (params, table0, delays0),
+                            (schedule, sample_idx, zoo_keys))
+
+    return jax.jit(scan_all)
+
+
+def _make_async_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
+                     use_lanes: bool):
+    """One asynchronous round for the activated client block {m_t}."""
+    if use_lanes and adapter.client_lanes is None:
+        raise ValueError(
+            f"adapter {adapter.name!r} has no client_lanes hook; "
+            "run with use_lanes=False")
+
+    def client_zoo_grad(server, c_stale, m, client_m, x_m, yb, key):
+        """ZOO (ours / zoo-vfl): only losses cross the wire."""
+        if use_lanes:
+            # stacked fan-out through the adapter's fused dual-pass (the
+            # zoo_dual_matmul Pallas kernel for the tabular client)
+            u_stack, d_eff = zoo.sample_directions(
+                key, client_m, vfl.zoo_queries, vfl.zoo_dist)
+            phi = zoo.phi_factor(vfl.zoo_dist, d_eff)
+            c_lanes = adapter.client_lanes(client_m, u_stack, vfl.mu, x_m)
+            losses = jax.vmap(
+                lambda cf: adapter.server_loss(server, c_stale.at[m].set(cf),
+                                               yb))(c_lanes)
+            return zoo.grad_from_losses(u_stack, losses[1:], losses[0],
+                                        vfl.mu, phi)
+
+        def c_loss(cm):
+            cb = c_stale.at[m].set(adapter.client_forward(cm, x_m))
+            return adapter.server_loss(server, cb, yb)
+
+        g, _, _ = zoo.zoo_gradient(key, c_loss, client_m, vfl.mu,
+                                   vfl.zoo_dist, vfl.zoo_queries,
+                                   unrolled=vfl.zoo_unrolled_oracle)
+        return g
+
+    def client_foo_grad(server, c_stale, m, client_m, x_m, yb):
+        """VAFL (privacy-leaky): server sends ∂L/∂c_m; client backprops."""
+        def c_loss(cm):
+            cb = c_stale.at[m].set(adapter.client_forward(cm, x_m))
+            return adapter.server_loss(server, cb, yb)
+        return jax.grad(c_loss)(client_m)
+
+    def step(params, table, m_blk, idx, key, x_parts, y):
         clients, server = params["clients"], params["server"]
-        client_m = jax.tree.map(lambda a: a[m_t], clients)
-        x_m = x_parts[m_t][idx]                          # (bs, f)
         yb = y[idx]
+        client_blk = jax.tree.map(lambda a: a[m_blk], clients)   # (R, ...)
+        x_blk = x_parts[m_blk[:, None], idx[None, :]]            # (R, bs, f)
 
-        # stale embeddings of all clients for this batch, fresh for m_t
-        c_stale = table[:, idx, :]                       # (M, bs, e)
-        c_fresh_m = tabular.client_forward(client_m, x_m)
-        c_batch = c_stale.at[m_t].set(c_fresh_m)
+        # stale embeddings of all clients for this batch; fresh per block
+        c_stale = table[:, idx]                                  # (M, bs, e)
+        c_fresh = jax.vmap(adapter.client_forward)(client_blk, x_blk)
+        c_batch = c_stale.at[m_blk].set(c_fresh)
 
-        # ---- server update ------------------------------------------------
+        # ---- server update (sees every activated client fresh) ----------
         if method in ("cascaded", "vafl"):
-            h, g_server = jax.value_and_grad(server_loss_fn)(
+            h, g_server = jax.value_and_grad(adapter.server_loss)(
                 server, jax.lax.stop_gradient(c_batch), yb)
             server = jax.tree.map(
                 lambda w, g: w - vfl.lr_server * g, server, g_server)
         else:  # zoo-vfl: server trains itself with ZOO too
             def s_loss(s):
-                return server_loss_fn(s, c_batch, yb)
+                return adapter.server_loss(s, c_batch, yb)
             g_server, h, _ = zoo.zoo_gradient(
                 jax.random.fold_in(key, 1), s_loss, server, vfl.mu,
-                vfl.zoo_dist)
+                vfl.zoo_dist, unrolled=vfl.zoo_unrolled_oracle)
             server = jax.tree.map(
                 lambda w, g: w - vfl.lr_server * g, server, g_server)
 
-        # ---- client update ------------------------------------------------
+        # ---- client updates (concurrent: each sees others STALE) --------
+        keys = jax.random.split(jax.random.fold_in(key, 2), m_blk.shape[0])
         if method == "vafl":
-            # privacy-leaky: server sends ∂L/∂c_m; client backprops locally
-            def c_loss(cm):
-                cb = c_batch.at[m_t].set(tabular.client_forward(cm, x_m))
-                return server_loss_fn(server, cb, yb)
-            g_client = jax.grad(c_loss)(client_m)
+            g_blk = jax.vmap(
+                lambda m, cm, xm: client_foo_grad(server, c_stale, m, cm,
+                                                  xm, yb)
+            )(m_blk, client_blk, x_blk)
         else:
-            # ZOO (ours / zoo-vfl): only losses cross the wire
-            def c_loss(cm):
-                cb = c_batch.at[m_t].set(tabular.client_forward(cm, x_m))
-                return server_loss_fn(server, cb, yb)
-            g_client, _, _ = zoo.zoo_gradient(
-                jax.random.fold_in(key, 2), c_loss, client_m, vfl.mu,
-                vfl.zoo_dist, vfl.zoo_queries)
-        new_client_m = jax.tree.map(
-            lambda w, g: w - vfl.lr_client * g, client_m, g_client)
+            g_blk = jax.vmap(
+                lambda m, cm, xm, k: client_zoo_grad(server, c_stale, m, cm,
+                                                     xm, yb, k)
+            )(m_blk, client_blk, x_blk, keys)
+        new_client_blk = jax.tree.map(
+            lambda cm, g: cm - vfl.lr_client * g, client_blk, g_blk)
         clients = jax.tree.map(
-            lambda all_, one: all_.at[m_t].set(one), clients, new_client_m)
+            lambda all_, new: all_.at[m_blk].set(new), clients,
+            new_client_blk)
 
-        # refresh the table with m_t's (pre-update) fresh embedding
-        table = table.at[m_t, idx].set(c_fresh_m)
+        # refresh the table with the block's (pre-update) fresh embeddings
+        table = table.at[m_blk[:, None], idx[None, :]].set(c_fresh)
         return {"clients": clients, "server": server}, table, h
 
     return step
 
 
-def _make_sync_step(method: str, vfl: VFLConfig, x_parts, y):
+def _make_sync_step(adapter: ModelAdapter, method: str, vfl: VFLConfig):
     """Synchronous rounds: Split-Learning (FOO) / Syn-ZOO-VFL."""
 
-    def step(params, table, m_t, idx, key):
+    def step(params, table, m_blk, idx, key, x_parts, y):
         xb = x_parts[:, idx, :]                          # (M, bs, f)
         yb = y[idx]
-        batch = {"x_parts": xb, "y": yb}
 
         if method == "split":
-            (h, _), grads = jax.value_and_grad(
-                tabular.global_loss, has_aux=True)(params, batch)
-            params = jax.tree.map(
-                lambda w, g: w - vfl.lr_server * g, params, grads)
+            h, grads = jax.value_and_grad(adapter.global_loss)(params, xb,
+                                                               yb)
         else:  # syn-zoo: every party (server + each client) does ZOO
-            def loss_of(p):
-                return tabular.global_loss(p, batch)[0]
-            grads, h, _ = zoo.zoo_gradient(key, loss_of, params, vfl.mu,
-                                           vfl.zoo_dist, vfl.zoo_queries)
-            params = jax.tree.map(
-                lambda w, g: w - vfl.lr_server * g, params, grads)
+            grads, h, _ = zoo.zoo_gradient(
+                key, lambda p: adapter.global_loss(p, xb, yb), params,
+                vfl.mu, vfl.zoo_dist, vfl.zoo_queries,
+                unrolled=vfl.zoo_unrolled_oracle)
+        params = jax.tree.map(
+            lambda w, g: w - vfl.lr_server * g, params, grads)
         return params, table, h
 
     return step

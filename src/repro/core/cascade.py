@@ -62,35 +62,43 @@ def make_cascaded_step(loss_fn: Callable, client_keys: Tuple[str, ...],
     def step(params, opt_state, batch, key):
         client, server = split_params(params, client_keys)
         row_mask = _maybe_row_mask(vfl, client, batch, vocab)
-        keys = jax.random.split(key, vfl.zoo_queries)
-        us, d_effs = zip(*[zoo.sample_direction(k, client, vfl.zoo_dist,
-                                                row_mask) for k in keys])
-        phis = [zoo.phi_factor(vfl.zoo_dist, d) for d in d_effs]
 
         if vfl.fused_dual:
-            # ---- §Perf fused path: ONE vmapped server pass over the
-            # stacked {clean, perturbed…} client params. The server weights
-            # are unbatched inside the vmap, so FSDP all-gathers them once
-            # instead of (1 + zoo_queries) times. Gradient flows from the
+            # ---- default path: vectorized fan-out. ALL q directions are
+            # drawn as stacked leaves and the server runs ONE vmapped pass
+            # over the (1 + q) lanes {clean, perturbed…}. The server
+            # weights are unbatched inside the vmap, so FSDP all-gathers
+            # them once instead of (1 + q) times, and compile time /
+            # dispatch overhead are constant in q. Gradient flows from the
             # clean lane only (zero cotangent on the perturbed lanes) —
-            # numerically identical to the unfused path.
-            stacked = jax.tree.map(
-                lambda c, *ps: jnp.stack([c] + list(ps)),
-                jax.lax.stop_gradient(client),
-                *[zoo.perturb(jax.lax.stop_gradient(client), u, vfl.mu)
-                  for u in us])
+            # numerically identical to the unrolled oracle below.
+            u_stack, d_eff = zoo.sample_directions(
+                key, client, vfl.zoo_queries, vfl.zoo_dist, row_mask)
+            phi = zoo.phi_factor(vfl.zoo_dist, d_eff)
+            lanes = zoo.stack_lanes(jax.lax.stop_gradient(client),
+                                    u_stack, vfl.mu)
 
             def server_loss(server_p):
                 losses = jax.vmap(
                     lambda c: loss_fn(merge_params(c, server_p), batch)[0]
-                )(stacked)
+                )(lanes)
                 return losses[0], losses
 
             (loss_clean, losses), g_server = jax.value_and_grad(
                 server_loss, has_aux=True)(server)
-            lps = [losses[1 + i] for i in range(vfl.zoo_queries)]
+            g_client = zoo.grad_from_losses(u_stack, losses[1:], loss_clean,
+                                            vfl.mu, phi)
+            loss_pert = losses[1]
         else:
-            # ---- server FOO (Eq. 4): exact backprop on w_0 only ---------
+            # ---- unrolled oracle (test-only): per-query Python loop,
+            # separate server passes. Kept as the numerical reference for
+            # the stacked path; never the production configuration.
+            keys = jax.random.split(key, vfl.zoo_queries)
+            us, d_effs = zip(*[zoo.sample_direction(k, client, vfl.zoo_dist,
+                                                    row_mask) for k in keys])
+            phis = [zoo.phi_factor(vfl.zoo_dist, d) for d in d_effs]
+
+            # server FOO (Eq. 4): exact backprop on w_0 only
             def server_loss(server_p):
                 loss, _ = loss_fn(
                     merge_params(jax.lax.stop_gradient(client), server_p),
@@ -102,11 +110,11 @@ def make_cascaded_step(loss_fn: Callable, client_keys: Tuple[str, ...],
                                         server), batch)[0]
                    for u in us]
 
-        # ---- client ZOO (Eq. 2/3) ---------------------------------------
-        gs = [zoo.two_point_grad(u, lp, loss_clean, vfl.mu, phi)
-              for u, lp, phi in zip(us, lps, phis)]
-        g_client = jax.tree.map(lambda *x: sum(x) / float(len(x)), *gs)
-        loss_pert = lps[0]
+            # client ZOO (Eq. 2/3)
+            gs = [zoo.two_point_grad(u, lp, loss_clean, vfl.mu, phi)
+                  for u, lp, phi in zip(us, lps, phis)]
+            g_client = jax.tree.map(lambda *x: sum(x) / float(len(x)), *gs)
+            loss_pert = lps[0]
 
         # ---- updates (separate lrs per party, paper §VI-A-d) -------------
         grads = merge_params(
@@ -169,10 +177,10 @@ def make_full_zoo_step(loss_fn, client_keys, vfl: VFLConfig, optimizer,
 
         g_client, loss_clean, _ = zoo.zoo_gradient(
             k_c, loss_of_client, client, vfl.mu, vfl.zoo_dist,
-            vfl.zoo_queries)
+            vfl.zoo_queries, unrolled=vfl.zoo_unrolled_oracle)
         g_server, _, _ = zoo.zoo_gradient(
             k_s, loss_of_server, server, vfl.mu, vfl.zoo_dist,
-            vfl.zoo_queries)
+            vfl.zoo_queries, unrolled=vfl.zoo_unrolled_oracle)
 
         grads = merge_params(
             jax.tree.map(lambda g: g * (vfl.lr_client / vfl.lr_server),

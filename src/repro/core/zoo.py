@@ -12,7 +12,12 @@ Beyond-paper extensions:
 * ``active_rows`` — perturb only embedding rows touched by the batch,
   shrinking the effective ZOO dimension from vocab·d to uniq_tokens·d
   (the paper's Thm IV.8 bounds convergence by d_client; this drops d_client
-  by orders of magnitude for LM clients).
+  by orders of magnitude for LM clients),
+* vectorized fan-out — all q perturbation queries are drawn as stacked
+  leaves (:func:`sample_directions`) and evaluated as vmapped lanes
+  (:func:`zoo_gradient`), so compile time and dispatch overhead are
+  constant in q instead of linear. The unrolled per-query path survives
+  behind ``unrolled=True`` as the numerical test oracle.
 """
 from __future__ import annotations
 
@@ -62,6 +67,43 @@ def sample_direction(key, tree, dist: str = "sphere",
     return u, d_eff
 
 
+def sample_directions(key, tree, n_queries: int, dist: str = "sphere",
+                      row_mask: Optional[dict] = None):
+    """Draw ALL q directions at once as stacked leaves.
+
+    Returns (u_stack, d_eff): ``u_stack`` matches ``tree``'s structure with
+    a leading (q,) lane axis on every leaf; ``d_eff`` is a (q,) vector (all
+    entries equal — the mask is shared across queries). Per-lane draws are
+    bitwise-identical to ``sample_direction`` over ``split(key, q)``, so
+    the stacked and unrolled code paths agree at a fixed key."""
+    if n_queries < 1:
+        raise ValueError(f"n_queries must be >= 1, got {n_queries} "
+                         "(q=0 would silently zero the ZOO gradient)")
+    keys = jax.random.split(key, n_queries)
+    u_stack, d_eff = jax.vmap(
+        lambda k: sample_direction(k, tree, dist, row_mask))(keys)
+    d_eff = jnp.broadcast_to(d_eff, (n_queries,))
+    return u_stack, d_eff
+
+
+def stack_lanes(tree, u_stack, mu: float):
+    """(1+q)-lane parameter stack: lane 0 clean, lanes 1..q = w + μ·u_i."""
+    return jax.tree.map(
+        lambda w, u: jnp.concatenate(
+            [w[None].astype(jnp.float32),
+             w[None].astype(jnp.float32) + mu * u], axis=0).astype(w.dtype),
+        tree, u_stack)
+
+
+def grad_from_losses(u_stack, losses_pert, loss_clean, mu: float, phi):
+    """Vectorized Eq. 3 with q-point averaging: the per-lane scalar
+    coefficients contract against the stacked directions in one tensordot
+    per leaf (no per-query Python loop)."""
+    q = losses_pert.shape[0]
+    coefs = ((phi / mu) * (losses_pert - loss_clean) / q).astype(jnp.float32)
+    return jax.tree.map(lambda u: jnp.tensordot(coefs, u, axes=1), u_stack)
+
+
 def perturb(tree, u, mu: float):
     return jax.tree.map(
         lambda w, uu: (w.astype(jnp.float32) + mu * uu).astype(w.dtype),
@@ -75,8 +117,12 @@ def two_point_grad(u, h_hat, h, mu: float, phi) -> dict:
 
 
 def zoo_gradient(key, loss_fn, tree, mu: float, dist: str = "sphere",
-                 n_queries: int = 1, row_mask=None):
+                 n_queries: int = 1, row_mask=None, unrolled: bool = False):
     """Full ZOO gradient of ``loss_fn(tree)`` with q-point averaging.
+
+    Default path vmaps the loss over the clean lane plus all q perturbation
+    lanes in one batched evaluation; ``unrolled=True`` keeps the original
+    per-query Python loop as a test oracle (identical draws at fixed key).
 
     Returns (grad_tree, loss_clean, aux). loss_fn must return a scalar
     (or (scalar, aux))."""
@@ -84,17 +130,27 @@ def zoo_gradient(key, loss_fn, tree, mu: float, dist: str = "sphere",
         out = loss_fn(t)
         return out if isinstance(out, tuple) else (out, None)
 
-    loss_clean, aux = eval_loss(tree)
+    if unrolled:
+        loss_clean, aux = eval_loss(tree)
 
-    def one_query(k):
-        u, d_eff = sample_direction(k, tree, dist, row_mask)
-        phi = phi_factor(dist, d_eff)
-        loss_pert, _ = eval_loss(perturb(tree, u, mu))
-        return two_point_grad(u, loss_pert, loss_clean, mu, phi)
+        def one_query(k):
+            u, d_eff = sample_direction(k, tree, dist, row_mask)
+            phi = phi_factor(dist, d_eff)
+            loss_pert, _ = eval_loss(perturb(tree, u, mu))
+            return two_point_grad(u, loss_pert, loss_clean, mu, phi)
 
-    keys = jax.random.split(key, n_queries)
-    grads = [one_query(k) for k in keys]
-    grad = jax.tree.map(lambda *gs: sum(gs) / float(n_queries), *grads)
+        keys = jax.random.split(key, n_queries)
+        grads = [one_query(k) for k in keys]
+        grad = jax.tree.map(lambda *gs: sum(gs) / float(n_queries), *grads)
+        return grad, loss_clean, aux
+
+    u_stack, d_eff = sample_directions(key, tree, n_queries, dist, row_mask)
+    phi = phi_factor(dist, d_eff)                               # (q,) | scalar
+    lanes = stack_lanes(tree, u_stack, mu)
+    losses, auxes = jax.vmap(eval_loss)(lanes)                  # (1+q,)
+    loss_clean = losses[0]
+    aux = jax.tree.map(lambda a: a[0], auxes)
+    grad = grad_from_losses(u_stack, losses[1:], loss_clean, mu, phi)
     return grad, loss_clean, aux
 
 

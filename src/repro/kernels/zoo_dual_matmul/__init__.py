@@ -1,3 +1,4 @@
-from repro.kernels.zoo_dual_matmul.ops import zoo_dual_matmul
+from repro.kernels.zoo_dual_matmul.ops import (
+    zoo_dual_matmul, zoo_dual_matmul_stacked)
 
-__all__ = ["zoo_dual_matmul"]
+__all__ = ["zoo_dual_matmul", "zoo_dual_matmul_stacked"]

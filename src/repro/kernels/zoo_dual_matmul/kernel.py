@@ -19,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _dual_matmul_kernel(x_ref, w_ref, u_ref, mu_ref, y_ref, y_hat_ref):
@@ -64,3 +65,61 @@ def zoo_dual_matmul_pallas(x, w, u, mu, *, bm: int = 128, bn: int = 128,
         ],
         interpret=interpret,
     )(x, w, u, mu_arr)
+
+
+def _dual_matmul_stacked_kernel(x_ref, w_ref, u_ref, mu_ref,
+                                y_ref, y_hat_ref, acc_ref):
+    """Stacked ZOO fan-out: ŷ_l = xW + μ(xU_l) for all q lanes.
+
+    Grid is (M/bm, N/bn, q) with the lane axis innermost, so for a fixed
+    output tile the xW product is computed ONCE (lane 0), parked in a VMEM
+    scratch accumulator, and re-used by every perturbation lane while the
+    x/W tiles stay resident — HBM traffic on x and W is constant in q."""
+    lane = pl.program_id(2)
+    x = x_ref[...]
+
+    @pl.when(lane == 0)
+    def _():
+        acc_ref[...] = jnp.dot(x, w_ref[...],
+                               preferred_element_type=jnp.float32)
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+    yu = jnp.dot(x, u_ref[0], preferred_element_type=jnp.float32)
+    y_hat_ref[0] = (acc_ref[...] + mu_ref[0] * yu).astype(y_hat_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def zoo_dual_matmul_stacked_pallas(x, w, us, mu, *, bm: int = 128,
+                                   bn: int = 128, interpret: bool = False):
+    """x (M, K), w (K, N), us (q, K, N), mu scalar ->
+    (y (M, N), y_hat (q, M, N)) with ŷ_l = x(W + μU_l)."""
+    M, K = x.shape
+    _, N = w.shape
+    q = us.shape[0]
+    assert us.shape == (q, K, N), (us.shape, (q, K, N))
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    mu_arr = jnp.asarray([mu], jnp.float32)
+
+    grid = (M // bm, N // bn, q)
+    return pl.pallas_call(
+        _dual_matmul_stacked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j, l: (0, j)),
+            pl.BlockSpec((1, K, bn), lambda i, j, l: (l, 0, j)),
+            pl.BlockSpec((1,), lambda i, j, l: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+            pl.BlockSpec((1, bm, bn), lambda i, j, l: (l, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), x.dtype),
+            jax.ShapeDtypeStruct((q, M, N), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, us, mu_arr)

@@ -3,7 +3,8 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.zoo_dual_matmul.kernel import zoo_dual_matmul_pallas
+from repro.kernels.zoo_dual_matmul.kernel import (
+    zoo_dual_matmul_pallas, zoo_dual_matmul_stacked_pallas)
 
 
 def _on_tpu() -> bool:
@@ -14,3 +15,10 @@ def zoo_dual_matmul(x, w, u, mu, *, bm: int = 128, bn: int = 128):
     """y = x @ w ; y_hat = x @ (w + mu*u) — one fused pass."""
     return zoo_dual_matmul_pallas(x, w, u, mu, bm=bm, bn=bn,
                                   interpret=not _on_tpu())
+
+
+def zoo_dual_matmul_stacked(x, w, us, mu, *, bm: int = 128, bn: int = 128):
+    """y = x @ w ; y_hat[l] = x @ (w + mu*us[l]) for all q lanes — the xW
+    product is computed once and shared across lanes."""
+    return zoo_dual_matmul_stacked_pallas(x, w, us, mu, bm=bm, bn=bn,
+                                          interpret=not _on_tpu())

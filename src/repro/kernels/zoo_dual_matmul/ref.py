@@ -7,3 +7,11 @@ def zoo_dual_matmul_ref(x, w, u, mu):
     y_hat = jnp.dot(x.astype(jnp.float32),
                     w.astype(jnp.float32) + mu * u.astype(jnp.float32))
     return y.astype(x.dtype), y_hat.astype(x.dtype)
+
+
+def zoo_dual_matmul_stacked_ref(x, w, us, mu):
+    """x (M,K), w (K,N), us (q,K,N) -> (y (M,N), y_hat (q,M,N))."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    yu = jnp.einsum("mk,qkn->qmn", x.astype(jnp.float32),
+                    us.astype(jnp.float32))
+    return y.astype(x.dtype), (y[None] + mu * yu).astype(x.dtype)

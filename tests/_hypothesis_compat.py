@@ -1,0 +1,76 @@
+"""Fallback shim for ``hypothesis``.
+
+When the real library is installed, re-export it untouched. When it is
+absent (the pinned CI/container image ships without it), ``@given`` runs
+the test body over a small deterministic set of fixed example values drawn
+from each strategy and ``@settings`` becomes a no-op — property coverage
+degrades to fixed-example coverage instead of killing collection.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A pre-drawn tuple of representative examples."""
+
+        def __init__(self, examples):
+            # dedupe while preserving order (min == max collapses to one)
+            self.examples = tuple(dict.fromkeys(examples))
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=0):
+            mid = (min_value + max_value) // 2
+            return _Strategy((min_value, mid, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy((min_value, (min_value + max_value) / 2.0,
+                              max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy((seq[0], seq[len(seq) // 2], seq[-1]))
+
+        @staticmethod
+        def booleans():
+            return _Strategy((False, True))
+
+    st = _St()
+
+    def given(**strategies):
+        """Run the test once per example column (pools zipped, cycling the
+        shorter ones) — a handful of deterministic cases, not a product."""
+        def deco(fn):
+            names = list(strategies)
+            pools = [strategies[n].examples for n in names]
+            width = max(len(p) for p in pools) if pools else 1
+
+            # NOTE: deliberately not functools.wraps — the wrapper must NOT
+            # expose the strategy parameters in its signature, or pytest
+            # would try to resolve them as fixtures.
+            def wrapper(**kwargs):
+                for i in range(width):
+                    drawn = {n: pools[j][i % len(pools[j])]
+                             for j, n in enumerate(names)}
+                    fn(**drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco

@@ -1,0 +1,92 @@
+"""Property-style tests for the ZOO estimator and the privacy ledger
+(hypothesis when available, deterministic fixed examples otherwise via
+tests/_hypothesis_compat)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import zoo
+from repro.core.privacy import GRADIENT_KINDS, Ledger, round_messages
+
+ZOO_METHODS = ("cascaded", "zoo-vfl", "syn-zoo-vfl")
+
+
+# --------------------------------------------------- sphere direction ------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**16), rows=st.sampled_from([1, 3, 8]),
+       q=st.sampled_from([1, 2, 5]))
+def test_sphere_directions_unit_norm_under_row_masks(seed, rows, q):
+    """Every stacked lane is an exact unit vector on the masked support,
+    and carries no mass outside it, for any mask width and lane count."""
+    tree = {"emb": jnp.zeros((8, 4)), "v": jnp.zeros(6)}
+    mask = {"emb": jnp.asarray([1.0] * rows + [0.0] * (8 - rows)),
+            "v": jnp.ones(6)}
+    u_stack, d_eff = zoo.sample_directions(jax.random.key(seed), tree, q,
+                                           "sphere", mask)
+    flat = np.concatenate(
+        [np.asarray(u).reshape(q, -1) for u in jax.tree.leaves(u_stack)], 1)
+    np.testing.assert_allclose(np.linalg.norm(flat, axis=1), 1.0, atol=1e-5)
+    masked_rows = np.asarray(u_stack["emb"])[:, rows:]
+    assert np.all(masked_rows == 0.0)
+    np.testing.assert_allclose(np.asarray(d_eff), rows * 4 + 6)
+
+
+# ----------------------------------------------------------- phi factor ----
+
+@settings(max_examples=12, deadline=None)
+@given(d=st.integers(1, 10_000))
+def test_phi_factor_matches_sampling_distribution(d):
+    """φ is the estimator's distribution-dependent scale (paper Eq. 2):
+    d for the unit sphere, 1 for the standard normal; anything else is a
+    config error, not a silent misestimate."""
+    assert float(zoo.phi_factor("sphere", d)) == float(d)
+    assert float(zoo.phi_factor("normal", d)) == 1.0
+    with pytest.raises(ValueError):
+        zoo.phi_factor("rademacher", d)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_estimator_scale_consistent_across_distributions(seed):
+    """With the matching φ, sphere and normal estimators agree with the
+    true gradient direction on a smooth quadratic — i.e. φ really does
+    match the sampling distribution, not just a constant."""
+    w = {"a": jnp.asarray(np.linspace(-1.0, 1.0, 6), jnp.float32)}
+
+    def loss(t):
+        return 0.5 * jnp.sum(jnp.square(t["a"]))
+
+    tg = np.asarray(jax.grad(loss)(w)["a"])
+    for dist in ("sphere", "normal"):
+        keys = jax.random.split(jax.random.key(seed), 1500)
+        gs = jax.vmap(
+            lambda k: zoo.zoo_gradient(k, loss, w, 1e-4, dist)[0]["a"])(keys)
+        eg = np.asarray(jnp.mean(gs, 0))
+        cos = eg @ tg / (np.linalg.norm(eg) * np.linalg.norm(tg))
+        assert cos > 0.9, (dist, cos)
+        ratio = np.linalg.norm(eg) / np.linalg.norm(tg)
+        assert 0.6 < ratio < 1.4, (dist, ratio)
+
+
+# ------------------------------------------------------- privacy ledger ----
+
+@settings(max_examples=25, deadline=None)
+@given(batch=st.integers(1, 4096), embed=st.integers(1, 8192))
+def test_ledger_never_ships_gradients_for_zoo_methods(batch, embed):
+    """§V structural guarantee at ANY (batch, embed): ZOO rounds consist of
+    embeddings up and scalar losses down — no GRADIENT_KINDS message ever
+    enters the ledger."""
+    for method in ZOO_METHODS:
+        msgs = round_messages(method, batch, embed)
+        assert all(m.kind not in GRADIENT_KINDS for m in msgs)
+        led = Ledger()
+        led.log_round(method, batch, embed)
+        assert not led.transmits_gradients
+        # and the byte accounting stays consistent with the wire shape
+        up = sum(m.nbytes for m in led.messages if m.sender == "client")
+        down = sum(m.nbytes for m in led.messages if m.sender == "server")
+        assert up == 2 * batch * embed * 4
+        assert down == 2 * batch * 4

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.rwkv import wkv6_chunked, wkv6_recurrent_ref
 from repro.models.ssm import _ssd_chunked, ssd_recurrent_ref
