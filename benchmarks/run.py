@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
   bench_wire                — §II communication efficiency (bytes/round)
   bench_kernels             — kernel microbench (XLA-path oracle timing)
   bench_zoo_fanout          — stacked vs unrolled ZOO fan-out, q ∈ {1,4,16}
+  bench_async_scale         — device-sharded client block, block ∈ {1,4,16}
+                              (subprocess: forces 8 virtual host devices)
   bench_roofline            — §Roofline terms from the dry-run artifacts
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
@@ -199,6 +201,27 @@ def bench_zoo_fanout(fast: bool):
     bench(fast, row=row)
 
 
+# ================================================ sharded async block ======
+
+def bench_async_scale(fast: bool):
+    """Spawned as a subprocess: the sweep forces 8 virtual host devices
+    via XLA_FLAGS, which must be set before jax first initializes — this
+    process has already locked the real device topology."""
+    import subprocess
+    import sys
+    cmd = [sys.executable, "-m", "benchmarks.async_scale"]
+    if not fast:
+        cmd.append("--full")
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    for line in proc.stdout.splitlines():
+        if line.startswith("async_scale"):
+            name, us, derived = line.split(",", 2)
+            row(name, float(us), derived)
+    if proc.returncode:
+        row("async_scale_failed", 0.0,
+            f"rc={proc.returncode};stderr={proc.stderr.strip()[-200:]}")
+
+
 # ======================================================== roofline =========
 
 def bench_roofline(fast: bool):
@@ -231,6 +254,7 @@ BENCHES = {
     "wire": bench_wire,
     "kernels": bench_kernels,
     "zoo_fanout": bench_zoo_fanout,
+    "async_scale": bench_async_scale,
     "roofline": bench_roofline,
 }
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,12 +40,17 @@ class ModelAdapter:
     * ``client_lanes(client_m, u_stack, mu, x_m)`` (optional) -> (1+q, bs, e):
       lane 0 the clean forward, lanes 1..q the μ-perturbed forwards — the
       hook that routes the stacked ZOO fan-out through a fused kernel.
+    * ``table_logical`` — per-dim logical axis names of the server's
+      (M, n, e) embedding table; the engine's device-sharded path resolves
+      its partitioning from these via ``repro.sharding.rules`` (the
+      leading "clients" axis shards rows across the mesh "data" axis).
     """
     name: str
     client_forward: Callable
     server_loss: Callable
     param_specs: Callable
     client_lanes: Optional[Callable] = None
+    table_logical: Tuple[Optional[str], ...] = ("clients", None, None)
 
     def init_params(self, key):
         return common.materialize(self.param_specs(), key)
@@ -96,6 +101,7 @@ def tabular_adapter(cfg: Optional[PaperMLPConfig] = None,
         server_loss=server_loss,
         param_specs=lambda: tabular.param_specs(cfg),
         client_lanes=client_lanes,
+        table_logical=("clients", None, None),
     )
 
 
@@ -121,7 +127,8 @@ def mlp_adapter(*, n_clients: int = 4, features: int = 32,
             "mlp": mlp.mlp_specs(acfg, e, d_ff),
         }
         return {
-            "clients": common.stack_layer_specs(client, n_clients),
+            "clients": common.stack_layer_specs(client, n_clients,
+                                                axis_name="clients"),
             "server": {
                 "w_in": ParamSpec((n_clients * e, se), "float32",
                                   (None, None), "scaled"),
@@ -148,4 +155,5 @@ def mlp_adapter(*, n_clients: int = 4, features: int = 32,
         return tabular.xent(h @ server["head"], y_batch)
 
     return ModelAdapter(name=f"mlp-{act}", client_forward=client_forward,
-                        server_loss=server_loss, param_specs=param_specs)
+                        server_loss=server_loss, param_specs=param_specs,
+                        table_logical=("clients", None, None))

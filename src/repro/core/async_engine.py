@@ -18,8 +18,28 @@ Per global round t (matching Fig. 2):
 The model plane is abstracted behind :class:`repro.core.adapters.ModelAdapter`,
 so the same scan body drives arbitrary ``repro.models`` client/server
 pairs — not just the paper's tabular MLP. The scan body is jitted once per
-(adapter, method, vfl, block) and cached, so repeated runs (benchmark
-sweeps) skip retracing.
+(adapter, method, vfl, block, mesh) and cached, so repeated runs
+(benchmark sweeps) skip retracing.
+
+Device-sharded client block (``mesh=`` path)
+--------------------------------------------
+Passing a ``("data",)`` mesh (see :func:`repro.launch.mesh.make_client_mesh`)
+shard_maps the round's client block across devices: each device hosts
+``block_size / D`` of the activated clients plus ``M / D`` rows of the
+embedding table (partitioned via the "clients" logical axis of
+``repro.sharding.rules``). Per round, the only cross-device traffic is
+
+  * an ``all_gather`` of the per-shard stale table slices and fresh block
+    embeddings at the server-loss boundary (the wire of Fig. 2), and
+  * a ``psum`` replicating the block's sparse client-parameter updates
+    (activated clients are distinct, so shard contributions are disjoint
+    and the sum is float-exact).
+
+Every client's ZOO fan-out — the q× forward passes that dominate a round —
+runs on its own shard with per-row RNG derived by ``fold_in`` on the
+GLOBAL row index, so the sharded engine draws the exact perturbation
+directions of the single-device engine: block_size=1 on a 1-shard mesh is
+bitwise identical, larger blocks agree to float-reassociation.
 
 Synchronous baselines (Split-Learning, Syn-ZOO-VFL) activate *all* clients
 every round with fresh embeddings (no table staleness).
@@ -33,17 +53,23 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import VFLConfig
 from repro.core import zoo
 from repro.core.adapters import ModelAdapter, tabular_adapter
+from repro.core.methods import (SYNC_METHODS, ZOO_WIRE_METHODS,
+                                canonical_method)
+from repro.core.privacy import Ledger
+from repro.sharding.rules import PARAM_RULES, resolve_spec
 
-SYNC_METHODS = ("split", "syn-zoo")
+CLIENT_AXIS = "data"        # mesh axis the client block shards over
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    method: str = "cascaded"   # cascaded | vafl | zoo-vfl | split | syn-zoo
+    method: str = "cascaded"   # any spelling in repro.core.methods
     steps: int = 1000
     batch_size: int = 64
     seed: int = 0
@@ -61,6 +87,10 @@ class EngineResult:
     losses: np.ndarray          # (T,)
     max_delay_seen: int
     mean_delay: float
+    # wire accounting (q-aware privacy ledger threaded through run())
+    wire_bytes: int = 0
+    transmits_gradients: bool = False
+    ledger: Optional[Ledger] = None
 
 
 def make_schedule(key, steps: int, n_clients: int,
@@ -80,24 +110,53 @@ def make_schedule(key, steps: int, n_clients: int,
                                     replace=False, p=p))(keys)
 
 
+def _validate_mesh(mesh: Mesh, sync: bool, method: str, block: int, M: int):
+    if sync:
+        raise ValueError(
+            f"mesh sharding only applies to asynchronous methods, not "
+            f"{method!r} (sync rounds have no client block to shard)")
+    if CLIENT_AXIS not in mesh.shape:
+        raise ValueError(
+            f"engine mesh needs a {CLIENT_AXIS!r} axis, got "
+            f"{dict(mesh.shape)} (use repro.launch.mesh.make_client_mesh)")
+    D = mesh.shape[CLIENT_AXIS]
+    if block % D:
+        raise ValueError(
+            f"block_size={block} not divisible by the mesh "
+            f"{CLIENT_AXIS!r} axis ({D} shards)")
+    if M % D:
+        raise ValueError(
+            f"n_clients={M} not divisible by the mesh {CLIENT_AXIS!r} "
+            f"axis ({D} shards): the embedding table rows cannot split")
+
+
 def run(cfg_engine: EngineConfig, vfl: VFLConfig, params, x_parts, y,
-        *, probs=None, adapter: Optional[ModelAdapter] = None) -> EngineResult:
-    """x_parts: (M, n, f) vertically partitioned features; y: (n,) labels."""
+        *, probs=None, adapter: Optional[ModelAdapter] = None,
+        mesh: Optional[Mesh] = None) -> EngineResult:
+    """x_parts: (M, n, f) vertically partitioned features; y: (n,) labels.
+
+    ``mesh``: optional ``("data",)`` mesh — shards the activated client
+    block and the embedding table rows across its devices (see module
+    docstring). Requires ``block_size % n_shards == 0`` and
+    ``M % n_shards == 0``."""
     adapter = adapter if adapter is not None else tabular_adapter()
+    method = canonical_method(cfg_engine.method)
     M, n, f = x_parts.shape
     T, bs = cfg_engine.steps, cfg_engine.batch_size
-    sync = cfg_engine.method in SYNC_METHODS
+    sync = method in SYNC_METHODS
     if sync and cfg_engine.use_lanes:
         raise ValueError(
             f"use_lanes only applies to asynchronous ZOO-client methods, "
-            f"not {cfg_engine.method!r} (the sync step has no per-client "
+            f"not {method!r} (the sync step has no per-client "
             "fan-out to route through the fused kernel)")
     if sync and cfg_engine.block_size != 1:
         raise ValueError(
             f"block_size={cfg_engine.block_size} has no meaning for the "
-            f"synchronous method {cfg_engine.method!r} (every client is "
+            f"synchronous method {method!r} (every client is "
             "activated every round)")
     block = 1 if sync else cfg_engine.block_size
+    if mesh is not None:
+        _validate_mesh(mesh, sync, method, block, M)
     key = jax.random.key(cfg_engine.seed)
     k_sched, k_idx, k_zoo = jax.random.split(key, 3)
 
@@ -111,28 +170,48 @@ def run(cfg_engine: EngineConfig, vfl: VFLConfig, params, x_parts, y,
     table0 = jax.vmap(adapter.client_forward)(params["clients"],
                                               x_parts)   # (M, n, e)
     delays0 = jnp.zeros((M, n), jnp.int32)
+    table_spec = None
+    if mesh is not None:
+        # partition the table rows via the "clients" logical axis rule
+        table_spec = resolve_spec(mesh, table0.shape, adapter.table_logical,
+                                  PARAM_RULES)
+        table0 = jax.device_put(table0, NamedSharding(mesh, table_spec))
 
-    runner = _make_runner(adapter, cfg_engine.method, vfl, sync, block,
-                          cfg_engine.use_lanes)
+    runner = _make_runner(adapter, method, vfl, sync, block,
+                          cfg_engine.use_lanes, mesh, table_spec)
     (params, table, delays), (losses, maxd) = runner(
         params, table0, delays0, schedule, sample_idx, zoo_keys, x_parts, y)
 
+    ledger = Ledger()
+    q = vfl.zoo_queries if method in ZOO_WIRE_METHODS else 1
+    ledger.log_round(method, bs, int(table0.shape[-1]), zoo_queries=q,
+                     n_clients=M if sync else block, n_rounds=T)
+
     return EngineResult(params=params, losses=np.asarray(losses),
                         max_delay_seen=int(jnp.max(maxd)),
-                        mean_delay=float(jnp.mean(delays)))
+                        mean_delay=float(jnp.mean(delays)),
+                        wire_bytes=ledger.total_bytes,
+                        transmits_gradients=ledger.transmits_gradients,
+                        ledger=ledger)
 
 
 # ------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=64)
 def _make_runner(adapter: ModelAdapter, method: str, vfl: VFLConfig,
-                 sync: bool, block: int, use_lanes: bool):
-    """Build + jit the full scan for one (adapter, method, vfl, block).
+                 sync: bool, block: int, use_lanes: bool,
+                 mesh: Optional[Mesh] = None, table_spec: Optional[P] = None):
+    """Build + jit the full scan for one (adapter, method, vfl, block, mesh).
 
     lru-cached so benchmark sweeps that re-enter ``run`` with the same
     protocol reuse the compiled executable instead of retracing."""
-    step_fn = (_make_sync_step(adapter, method, vfl) if sync
-               else _make_async_step(adapter, method, vfl, use_lanes))
+    if sync:
+        step_fn = _make_sync_step(adapter, method, vfl)
+    elif mesh is not None:
+        step_fn = _make_sharded_step(adapter, method, vfl, use_lanes,
+                                     mesh, block, table_spec)
+    else:
+        step_fn = _make_async_step(adapter, method, vfl, use_lanes)
 
     def scan_all(params, table0, delays0, schedule, sample_idx, zoo_keys,
                  x_parts, y):
@@ -155,9 +234,18 @@ def _make_runner(adapter: ModelAdapter, method: str, vfl: VFLConfig,
     return jax.jit(scan_all)
 
 
-def _make_async_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
-                     use_lanes: bool):
-    """One asynchronous round for the activated client block {m_t}."""
+def _row_keys(key, rows):
+    """Per-client-row RNG: fold the round key on the GLOBAL row index, so
+    a block row draws the same directions no matter which device shard it
+    lands on (single-device and sharded engines agree bitwise)."""
+    k = jax.random.fold_in(key, 2)
+    return jax.vmap(lambda r: jax.random.fold_in(k, r))(rows)
+
+
+def _make_client_grad_fns(adapter: ModelAdapter, method: str,
+                          vfl: VFLConfig, use_lanes: bool):
+    """Per-activated-client gradient closures shared by the single-device
+    and sharded async steps (both vmap them over their block rows)."""
     if use_lanes and adapter.client_lanes is None:
         raise ValueError(
             f"adapter {adapter.name!r} has no client_lanes hook; "
@@ -194,6 +282,37 @@ def _make_async_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
             return adapter.server_loss(server, cb, yb)
         return jax.grad(c_loss)(client_m)
 
+    return client_zoo_grad, client_foo_grad
+
+
+def _server_update(adapter: ModelAdapter, method: str, vfl: VFLConfig,
+                   server, c_batch, yb, key):
+    """One server step on the round's (stale + fresh-block) embeddings.
+
+    Returns (new_server, h). FOO methods backprop locally (Eq. 4);
+    zoo-vfl estimates with the same q-point two-point oracle the client
+    uses (vfl.zoo_queries — the server is a ZOO party too)."""
+    if method in ("cascaded", "vafl"):
+        h, g_server = jax.value_and_grad(adapter.server_loss)(
+            server, jax.lax.stop_gradient(c_batch), yb)
+    else:  # zoo-vfl: server trains itself with ZOO too
+        def s_loss(s):
+            return adapter.server_loss(s, c_batch, yb)
+        g_server, h, _ = zoo.zoo_gradient(
+            jax.random.fold_in(key, 1), s_loss, server, vfl.mu,
+            vfl.zoo_dist, vfl.zoo_queries,
+            unrolled=vfl.zoo_unrolled_oracle)
+    server = jax.tree.map(
+        lambda w, g: w - vfl.lr_server * g, server, g_server)
+    return server, h
+
+
+def _make_async_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
+                     use_lanes: bool):
+    """One asynchronous round for the activated client block {m_t}."""
+    client_zoo_grad, client_foo_grad = _make_client_grad_fns(
+        adapter, method, vfl, use_lanes)
+
     def step(params, table, m_blk, idx, key, x_parts, y):
         clients, server = params["clients"], params["server"]
         yb = y[idx]
@@ -206,22 +325,11 @@ def _make_async_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
         c_batch = c_stale.at[m_blk].set(c_fresh)
 
         # ---- server update (sees every activated client fresh) ----------
-        if method in ("cascaded", "vafl"):
-            h, g_server = jax.value_and_grad(adapter.server_loss)(
-                server, jax.lax.stop_gradient(c_batch), yb)
-            server = jax.tree.map(
-                lambda w, g: w - vfl.lr_server * g, server, g_server)
-        else:  # zoo-vfl: server trains itself with ZOO too
-            def s_loss(s):
-                return adapter.server_loss(s, c_batch, yb)
-            g_server, h, _ = zoo.zoo_gradient(
-                jax.random.fold_in(key, 1), s_loss, server, vfl.mu,
-                vfl.zoo_dist, unrolled=vfl.zoo_unrolled_oracle)
-            server = jax.tree.map(
-                lambda w, g: w - vfl.lr_server * g, server, g_server)
+        server, h = _server_update(adapter, method, vfl, server, c_batch,
+                                   yb, key)
 
         # ---- client updates (concurrent: each sees others STALE) --------
-        keys = jax.random.split(jax.random.fold_in(key, 2), m_blk.shape[0])
+        keys = _row_keys(key, jnp.arange(m_blk.shape[0]))
         if method == "vafl":
             g_blk = jax.vmap(
                 lambda m, cm, xm: client_foo_grad(server, c_stale, m, cm,
@@ -243,6 +351,104 @@ def _make_async_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
         return {"clients": clients, "server": server}, table, h
 
     return step
+
+
+def _make_sharded_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
+                       use_lanes: bool, mesh: Mesh, block: int,
+                       table_spec: P):
+    """Device-sharded asynchronous round: the block's R activated clients
+    split R/D per device, the (M, n, e) table splits M/D rows per device,
+    and cross-device traffic happens only at the server-loss boundary
+    (all_gather) plus one float-exact psum replicating the sparse client
+    updates. See module docstring for the equivalence guarantees."""
+    client_zoo_grad, client_foo_grad = _make_client_grad_fns(
+        adapter, method, vfl, use_lanes)
+    D = mesh.shape[CLIENT_AXIS]
+    rows_local = block // D
+
+    def shard_body(clients, server, table_l, m_blk_l, idx, key, x_parts, y):
+        shard = jax.lax.axis_index(CLIENT_AXIS)
+        rows_table = table_l.shape[0]                    # M / D
+        yb = y[idx]
+        # local block rows gather from the REPLICATED client param stack
+        client_blk = jax.tree.map(lambda a: a[m_blk_l], clients)
+        x_blk = x_parts[m_blk_l[:, None], idx[None, :]]  # (R/D, bs, f)
+
+        # ---- server-loss boundary: the only gather of the round ---------
+        # each shard contributes its table rows' stale embeddings and its
+        # block rows' fresh embeddings; shard order == global row order
+        c_stale = jax.lax.all_gather(table_l[:, idx], CLIENT_AXIS,
+                                     axis=0, tiled=True)          # (M, bs, e)
+        c_fresh = jax.vmap(adapter.client_forward)(client_blk, x_blk)
+        c_fresh_all = jax.lax.all_gather(c_fresh, CLIENT_AXIS,
+                                         axis=0, tiled=True)      # (R, bs, e)
+        m_all = jax.lax.all_gather(m_blk_l, CLIENT_AXIS,
+                                   axis=0, tiled=True)            # (R,)
+        c_batch = c_stale.at[m_all].set(c_fresh_all)
+
+        # ---- server update: replicated compute, identical per shard -----
+        # (tiny vs the q× client fan-outs, which stay fully sharded — the
+        # FOO step overlaps the other shards' fan-outs instead of
+        # serializing a parameter broadcast behind them)
+        server, h = _server_update(adapter, method, vfl, server, c_batch,
+                                   yb, key)
+
+        # ---- client updates: each shard fans out ONLY its block rows ----
+        keys = _row_keys(key, shard * rows_local + jnp.arange(rows_local))
+        if method == "vafl":
+            g_blk = jax.vmap(
+                lambda m, cm, xm: client_foo_grad(server, c_stale, m, cm,
+                                                  xm, yb)
+            )(m_blk_l, client_blk, x_blk)
+        else:
+            g_blk = jax.vmap(
+                lambda m, cm, xm, k: client_zoo_grad(server, c_stale, m, cm,
+                                                     xm, yb, k)
+            )(m_blk_l, client_blk, x_blk, keys)
+        new_client_blk = jax.tree.map(
+            lambda cm, g: cm - vfl.lr_client * g, client_blk, g_blk)
+
+        # replicate the sparse update: activated clients are DISTINCT, so
+        # each global row is written by exactly one shard and the psum of
+        # one value plus zeros is float-exact (bitwise == .at[].set)
+        mask = jax.lax.psum(
+            jnp.zeros((_stack_rows(clients),), jnp.float32)
+            .at[m_blk_l].set(1.0), CLIENT_AXIS)
+
+        def replicate_rows(all_, new):
+            buf = jax.lax.psum(
+                jnp.zeros_like(all_).at[m_blk_l].set(new), CLIENT_AXIS)
+            m = mask.reshape((-1,) + (1,) * (all_.ndim - 1))
+            return jnp.where(m > 0, buf, all_)
+
+        clients = jax.tree.map(replicate_rows, clients, new_client_blk)
+
+        # ---- local table refresh: keep only rows this shard owns --------
+        # (out-of-range scatter indices are dropped by JAX's default mode)
+        local_m = m_all - shard * rows_table
+        safe_m = jnp.where((local_m >= 0) & (local_m < rows_table),
+                           local_m, rows_table)
+        table_l = table_l.at[safe_m[:, None], idx[None, :]].set(c_fresh_all)
+        return clients, server, table_l, h
+
+    sharded = shard_map(
+        shard_body, mesh,
+        in_specs=(P(), P(), table_spec, P(CLIENT_AXIS), P(), P(), P(), P()),
+        out_specs=(P(), P(), table_spec, P()),
+        check_rep=False)
+
+    def step(params, table, m_blk, idx, key, x_parts, y):
+        clients, server, table, h = sharded(
+            params["clients"], params["server"], table, m_blk, idx, key,
+            x_parts, y)
+        return {"clients": clients, "server": server}, table, h
+
+    return step
+
+
+def _stack_rows(clients) -> int:
+    """Leading (M) axis of the stacked client parameter pytree."""
+    return jax.tree.leaves(clients)[0].shape[0]
 
 
 def _make_sync_step(adapter: ModelAdapter, method: str, vfl: VFLConfig):

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import VFLConfig
 from repro.core import zoo
+from repro.core.methods import canonical_method
 from repro.core.partition import merge_params, split_params
 
 
@@ -137,15 +138,16 @@ def make_step_for_method(method: str, loss_fn, client_keys, vfl: VFLConfig,
 
     cascaded      : ZOO client + FOO server   (ours)
     vafl / split  : FOO client + FOO server   (privacy-leaky upper bound)
-    zoo-vfl / syn-zoo-vfl : ZOO client + ZOO server
-    (sync-vs-async semantics live in repro.core.async_engine)."""
-    if method in ("cascaded", "ours"):
+    zoo-vfl / syn-zoo : ZOO client + ZOO server
+    (sync-vs-async semantics live in repro.core.async_engine; spellings
+    normalize through repro.core.methods so the three modules agree)."""
+    method = canonical_method(method)
+    if method == "cascaded":
         return make_cascaded_step(loss_fn, client_keys, vfl, optimizer, vocab)
-    if method in ("vafl", "split-learning", "foo"):
+    if method in ("vafl", "split"):
         return make_foo_step(loss_fn, optimizer)
-    if method in ("zoo-vfl", "syn-zoo-vfl", "zoo"):
-        return make_full_zoo_step(loss_fn, client_keys, vfl, optimizer, vocab)
-    raise ValueError(f"unknown method {method!r}")
+    assert method in ("zoo-vfl", "syn-zoo"), method
+    return make_full_zoo_step(loss_fn, client_keys, vfl, optimizer, vocab)
 
 
 def make_foo_step(loss_fn, optimizer):

@@ -5,6 +5,13 @@ framework — the paper's security argument (§V) is structural: ZOO modes
 transmit embeddings up and scalar losses down, never gradients or model
 internals. The ledger makes that checkable in tests and reportable in
 benchmarks (per-round bytes for the communication-efficiency comparison).
+
+The accounting is q-aware: with ``zoo_queries = q`` the client uploads
+the clean embedding plus q perturbed embeddings ĉ_i, and the server
+returns the clean loss h plus q perturbed losses ĥ_i — so the perturbed
+traffic scales exactly linearly in q while the clean messages do not.
+Method spellings are normalized through :mod:`repro.core.methods`, so
+every name accepted by ``cascade``/``async_engine`` is accepted here.
 """
 from __future__ import annotations
 
@@ -12,6 +19,9 @@ import dataclasses
 from typing import Dict, List, Tuple
 
 import numpy as np
+
+from repro.core.methods import (FOO_WIRE_METHODS, ZOO_WIRE_METHODS,
+                                canonical_method)
 
 GRADIENT_KINDS = frozenset({"partial_derivative", "gradient", "jacobian"})
 
@@ -28,30 +38,48 @@ class Message:
         return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
 
 
-def round_messages(method: str, batch: int, embed: int) -> List[Message]:
-    """Wire contents of ONE asynchronous round (one activated client)."""
+def round_messages(method: str, batch: int, embed: int,
+                   zoo_queries: int = 1) -> List[Message]:
+    """Wire contents of ONE activated client's round.
+
+    ZOO-wire methods carry 1 clean + q perturbed embeddings up and
+    1 clean + q perturbed scalar-loss vectors down (q = ``zoo_queries``);
+    FOO-wire methods carry one embedding up and one ∂L/∂c down — q never
+    enters (there is no query fan-out on a first-order wire)."""
+    if zoo_queries < 1:
+        raise ValueError(f"zoo_queries must be >= 1, got {zoo_queries}")
+    method = canonical_method(method)
     up_clean = Message("client", "embedding", (batch, embed))
-    if method in ("cascaded", "zoo-vfl", "syn-zoo-vfl"):
-        return [
-            up_clean,
-            Message("client", "embedding", (batch, embed)),   # ĉ (perturbed)
-            Message("server", "loss", (batch,)),              # h
-            Message("server", "loss", (batch,)),              # ĥ
-        ]
-    if method in ("vafl", "split-learning", "split"):
-        return [
-            up_clean,
-            Message("server", "partial_derivative", (batch, embed)),  # ∂L/∂c
-        ]
-    raise ValueError(method)
+    if method in ZOO_WIRE_METHODS:
+        q = zoo_queries
+        return (
+            [up_clean]
+            + [Message("client", "embedding", (batch, embed))] * q  # ĉ_i
+            + [Message("server", "loss", (batch,))]                 # h
+            + [Message("server", "loss", (batch,))] * q             # ĥ_i
+        )
+    assert method in FOO_WIRE_METHODS, method
+    return [
+        up_clean,
+        Message("server", "partial_derivative", (batch, embed)),    # ∂L/∂c
+    ]
 
 
 @dataclasses.dataclass
 class Ledger:
     messages: List[Message] = dataclasses.field(default_factory=list)
 
-    def log_round(self, method: str, batch: int, embed: int):
-        self.messages.extend(round_messages(method, batch, embed))
+    def log_round(self, method: str, batch: int, embed: int, *,
+                  zoo_queries: int = 1, n_clients: int = 1,
+                  n_rounds: int = 1):
+        """Log ``n_rounds`` identical global rounds of ``n_clients``
+        concurrently activated clients (the async engine's block, or all
+        M for sync methods), each exchanging the q-aware per-client
+        message set. Messages are frozen, so the repeated entries share
+        the same instances — O(1) constructions however many rounds."""
+        self.messages.extend(
+            round_messages(method, batch, embed, zoo_queries)
+            * (n_clients * n_rounds))
 
     @property
     def total_bytes(self) -> int:

@@ -84,8 +84,8 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
                     (batch, cfg.encoder_seq, cfg.frontend_dim), jnp.bfloat16)
             params, opt_state, out = jit_step(
                 params, opt_state, b, jax.random.fold_in(key, i))
-            ledger.log_round(method if method != "split-learning" else "split",
-                             batch, cfg.d_model)
+            ledger.log_round(method, batch, cfg.d_model,
+                             zoo_queries=zoo_queries)
             losses.append(float(out.loss))
             if i % log_every == 0:
                 print(f"step {i:5d} loss {losses[-1]:.4f} "

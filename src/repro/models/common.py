@@ -96,10 +96,14 @@ def dense_spec(d_in: int, d_out: int, logical=("embed", "ffn"), dtype="bfloat16"
     return ParamSpec((d_in, d_out), dtype, logical, init)
 
 
-def stack_layer_specs(layer_tree, n_layers: int):
-    """Prepend the scanned layer dim to every leaf of a single-layer tree."""
+def stack_layer_specs(layer_tree, n_layers: int, axis_name: str = "layers"):
+    """Prepend a stacked leading dim to every leaf of a single-layer tree.
+
+    ``axis_name`` is the logical name of the new axis: "layers" for the
+    scanned transformer stack, "clients" for the VFL party plane (the
+    async engine's per-client parameter stack)."""
     def one(s: ParamSpec):
         logical = s.logical if s.logical else (None,) * len(s.shape)
         return ParamSpec((n_layers,) + tuple(s.shape), s.dtype,
-                         ("layers",) + tuple(logical), s.init, s.scale)
+                         (axis_name,) + tuple(logical), s.init, s.scale)
     return jax.tree.map(one, layer_tree, is_leaf=is_spec)

@@ -20,8 +20,9 @@ def param_specs(cfg: PaperMLPConfig):
     M, se, C = cfg.n_clients, cfg.server_embed, cfg.n_classes
     return {
         "clients": {
-            "w": ParamSpec((M, f, e), "float32", (None, None, None), "scaled"),
-            "b": ParamSpec((M, e), "float32", (None, None), "zeros"),
+            "w": ParamSpec((M, f, e), "float32",
+                           ("clients", None, None), "scaled"),
+            "b": ParamSpec((M, e), "float32", ("clients", None), "zeros"),
         },
         "server": {
             "w1": ParamSpec((M * e, se), "float32", (None, None), "scaled"),

@@ -45,6 +45,11 @@ PARAM_RULES = Rules({
     "pos":        (),
     "layers":     (),
     "frontend":   ("data",),
+    # VFL party plane: the async engine's stacked per-client leading axis
+    # (client params (M, ...) and the server's embedding table (M, n, e)).
+    # Rows partition over "data" — one device hosts M/D clients — and the
+    # divisibility fallback replicates on meshes that don't divide M.
+    "clients":    ("data",),
 })
 
 # §Perf variant: tensor/expert-parallel only — no FSDP over "data". For

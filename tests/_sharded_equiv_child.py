@@ -1,0 +1,78 @@
+"""Child process for the sharded-engine equivalence tests.
+
+Forces 8 virtual host devices BEFORE the first jax import (the parent
+pytest process has already locked the real topology, so this must run in
+its own interpreter — ``test_async_sharded.py`` spawns it and asserts on
+the exit code). Checks the ISSUE acceptance pair:
+
+  * block_size=1 sharded losses/params == single-device engine BITWISE
+  * block_size=4 over a 4-shard mesh matches to float tolerance
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np     # noqa: E402
+
+from repro.configs import VFLConfig                    # noqa: E402
+from repro.configs.paper_mlp import PaperMLPConfig     # noqa: E402
+from repro.core import async_engine                    # noqa: E402
+from repro.data import make_classification, vertical_partition  # noqa: E402
+from repro.launch.mesh import make_client_mesh         # noqa: E402
+from repro.models import common, tabular               # noqa: E402
+
+
+def main():
+    assert jax.device_count() == 8, jax.devices()
+
+    cfg = PaperMLPConfig(n_features=32, n_classes=4, n_clients=8,
+                         client_embed=16, server_embed=32)
+    X, y = make_classification(0, 256, cfg.n_features, cfg.n_classes)
+    Xp = jnp.asarray(vertical_partition(X, cfg.n_clients))
+    y = jnp.asarray(y)
+    params = common.materialize(tabular.param_specs(cfg), jax.random.key(0))
+    vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=0.05, zoo_queries=2)
+
+    # ---- block_size=1: sharded path must be bitwise-exact ---------------
+    ec1 = async_engine.EngineConfig(method="cascaded", steps=25,
+                                    batch_size=8, block_size=1)
+    single = async_engine.run(ec1, vfl, params, Xp, y)
+    shard = async_engine.run(ec1, vfl, params, Xp, y,
+                             mesh=make_client_mesh(1))
+    assert np.array_equal(single.losses, shard.losses), (
+        np.abs(single.losses - shard.losses).max())
+    for a, b in zip(jax.tree.leaves(single.params),
+                    jax.tree.leaves(shard.params)):
+        assert jnp.array_equal(a, b)
+    print("block1 bitwise: ok")
+
+    # ---- block_size=4 over 4 shards: allclose across 25 rounds ----------
+    ec4 = async_engine.EngineConfig(method="cascaded", steps=25,
+                                    batch_size=8, block_size=4)
+    single4 = async_engine.run(ec4, vfl, params, Xp, y)
+    shard4 = async_engine.run(ec4, vfl, params, Xp, y,
+                              mesh=make_client_mesh(4))
+    assert np.all(np.isfinite(shard4.losses))
+    assert np.allclose(single4.losses, shard4.losses,
+                       rtol=1e-5, atol=1e-6), (
+        np.abs(single4.losses - shard4.losses).max())
+    print("block4/4-shard allclose: ok")
+
+    # the wire ledger is sharding-invariant (protocol, not placement)
+    assert single4.wire_bytes == shard4.wire_bytes
+    assert not shard4.transmits_gradients
+
+    # indivisible block rejected on a real >1-shard mesh
+    try:
+        async_engine.run(ec4, vfl, params, Xp, y, mesh=make_client_mesh(3))
+    except ValueError:
+        print("indivisible block rejected: ok")
+    else:
+        raise AssertionError("block=4 on 3 shards should raise")
+
+
+if __name__ == "__main__":
+    main()
+    print("CHILD_OK")

@@ -118,3 +118,67 @@ def test_ledger_byte_accounting():
     down = sum(m.nbytes for m in msgs if m.sender == "server")
     assert up == 2 * 64 * 128 * 4          # c and ĉ
     assert down == 2 * 64 * 4              # h and ĥ (scalars per sample)
+
+
+def test_ledger_byte_accounting_scales_with_q():
+    """q-aware wire accounting: ZOO rounds carry q perturbed embeddings up
+    and q losses ĥ down; the clean c/h pair does not scale."""
+    b, e = 64, 128
+    for method in ("cascaded", "zoo-vfl", "syn-zoo"):
+        ref = round_messages(method, b, e, zoo_queries=1)
+        ref_up = sum(m.nbytes for m in ref if m.sender == "client")
+        ref_down = sum(m.nbytes for m in ref if m.sender == "server")
+        for q in (2, 4):
+            msgs = round_messages(method, b, e, zoo_queries=q)
+            up = sum(m.nbytes for m in msgs if m.sender == "client")
+            down = sum(m.nbytes for m in msgs if m.sender == "server")
+            # perturbed-only scaling: totals = clean + q * (one ĉ / one ĥ)
+            assert up - b * e * 4 == q * (ref_up - b * e * 4)
+            assert down - b * 4 == q * (ref_down - b * 4)
+    # FOO wires have no query fan-out: q never changes the bytes
+    assert (round_messages("vafl", b, e, zoo_queries=4)
+            == round_messages("vafl", b, e, zoo_queries=1))
+
+
+def test_ledger_q4_exactly_4x_perturbed_bytes():
+    """ISSUE acceptance: cascaded q=4 totals are exactly 4× the perturbed
+    embedding and ĥ bytes of q=1."""
+    led1, led4 = Ledger(), Ledger()
+    led1.log_round("cascaded", 64, 128, zoo_queries=1)
+    led4.log_round("cascaded", 64, 128, zoo_queries=4)
+    pert1 = sum(m.nbytes for m in led1.messages[1:]
+                if m.kind == "embedding")
+    pert4 = sum(m.nbytes for m in led4.messages[1:]
+                if m.kind == "embedding")
+    hhat1 = sum(m.nbytes for m in led1.messages if m.kind == "loss") / 2
+    hhat4 = (sum(m.nbytes for m in led4.messages if m.kind == "loss")
+             - 64 * 4)                       # minus the one clean h
+    assert pert4 == 4 * pert1
+    assert hhat4 == 4 * hhat1
+
+
+def test_round_messages_accepts_engine_method_spellings():
+    """The alias table is shared: every spelling cascade/async_engine
+    accept must be accepted by the ledger (the 'syn-zoo' regression)."""
+    from repro.core.methods import METHOD_ALIASES
+    for spelling in METHOD_ALIASES:
+        msgs = round_messages(spelling, 8, 4)
+        assert msgs, spelling
+    with pytest.raises(ValueError):
+        round_messages("sgd-vfl", 8, 4)
+
+
+def test_zoo_vfl_server_update_uses_zoo_queries(setup):
+    """Regression: the engine's zoo-vfl SERVER step must honour
+    vfl.zoo_queries (it silently used q=1 while the client used q)."""
+    cfg, Xp, y, params = setup
+    ec = async_engine.EngineConfig(method="zoo-vfl", steps=1, batch_size=16)
+    res = {}
+    for q in (1, 4):
+        vfl = VFLConfig(mu=1e-3, lr_server=0.01, lr_client=0.01,
+                        zoo_queries=q)
+        res[q] = async_engine.run(ec, vfl, params, Xp, y)
+    same = [bool(jnp.array_equal(a, b)) for a, b in zip(
+        jax.tree.leaves(res[1].params["server"]),
+        jax.tree.leaves(res[4].params["server"]))]
+    assert not all(same), "server ZOO gradient ignored zoo_queries"
