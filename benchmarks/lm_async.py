@@ -1,0 +1,103 @@
+"""LM-scale server under the async engine: a reduced transformer-backbone
+config driven with real staleness semantics through the federation
+session API (the ROADMAP's "large-model server configs in the async
+engine" item, closed by ``adapters.from_model_config``).
+
+Sweeps the ZOO query fan-out q ∈ {1, 4} over the cascaded protocol
+(embedding clients / transformer server) and records
+
+  * steady-state per-round wall clock (compile excluded; the runner is
+    lru-cached so the timed second ``run`` reuses the executable),
+  * the sublinearity of per-round time in q (the fused lanes evaluate
+    the clean + q perturbed client forwards in one vmapped pass), and
+  * one DP point: the same run with the Gaussian loss channel enabled
+    must stay gradient-free and report a finite spent (ε, δ).
+
+Run: PYTHONPATH=src python -m benchmarks.lm_async [--full]
+(also registered as ``benchmarks.run --only lm_async``.)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import VFLConfig, get_config, reduced
+from repro.core.async_engine import EngineConfig
+from repro.data import lm_token_batches, vertical_partition
+from repro.federation import Federation, GaussianLossChannel
+
+QUERIES = (1, 4)
+N_CLIENTS = 4
+SEQ = 32
+
+
+def bench_lm_async(fast: bool = True, row=None):
+    """Emit name,us_per_call,derived rows; returns {q: us}."""
+    if row is None:
+        def row(name, us, derived):
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+    cfg = reduced(get_config("phi3-mini-3.8b"), d_model=64, n_heads=2,
+                  n_kv_heads=1, d_ff=128, vocab_size=256)
+    steps = 20 if fast else 100
+    toks = next(lm_token_batches(0, cfg.vocab_size, 128, SEQ))["tokens"]
+    x_parts = jnp.asarray(vertical_partition(toks, N_CLIENTS))
+    y = jnp.asarray(toks)
+
+    results = {}
+    for q in QUERIES:
+        vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=1e-4,
+                        zoo_queries=q, active_rows_only=True)
+        fed = Federation.build(
+            cfg, vfl, EngineConfig(method="cascaded", steps=steps,
+                                   batch_size=8, use_lanes=True),
+            n_clients=N_CLIENTS, seq_len=SEQ)
+        params = fed.init_params(jax.random.key(0))
+        t0 = time.perf_counter()
+        fed.run(params, x_parts, y)                    # compile + warm
+        compile_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = fed.run(params, x_parts, y)
+        us = (time.perf_counter() - t0) / steps * 1e6
+        results[q] = us
+        row(f"lm_async_q{q}", us,
+            f"loss_drop={res.losses[:5].mean() - res.losses[-5:].mean():.4f};"
+            f"compile_s={compile_s:.2f};max_delay={res.max_delay_seen};"
+            f"wire_bytes_per_round={res.wire_bytes // steps};"
+            f"wire_grad={res.transmits_gradients}")
+
+    growth = results[QUERIES[-1]] / max(results[QUERIES[0]], 1e-9)
+    row("lm_async_q_scaling", 0.0,
+        f"round_time_growth_q{QUERIES[0]}->q{QUERIES[-1]}={growth:.2f}x;"
+        f"linear_would_be={QUERIES[-1] // QUERIES[0]}x;"
+        f"sublinear={growth < QUERIES[-1] / QUERIES[0]}")
+
+    # DP point: noise channel on the loss downlink
+    fed_dp = Federation.build(
+        cfg, VFLConfig(mu=1e-3, lr_server=0.05, lr_client=1e-4),
+        EngineConfig(method="cascaded", steps=steps, batch_size=8),
+        n_clients=N_CLIENTS, seq_len=SEQ,
+        noise=GaussianLossChannel(clip=10.0, epsilon=0.5, delta=1e-5))
+    res_dp = fed_dp.run(fed_dp.init_params(jax.random.key(1)), x_parts, y)
+    row("lm_async_dp", 0.0,
+        f"eps={res_dp.epsilon:.2f};delta={res_dp.delta:.1e};"
+        f"finite={np.isfinite(res_dp.epsilon)};"
+        f"wire_grad={res_dp.transmits_gradients}")
+    assert np.isfinite(res_dp.epsilon) and not res_dp.transmits_gradients
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", dest="fast", action="store_false", default=True)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_lm_async(args.fast)
+
+
+if __name__ == "__main__":
+    main()

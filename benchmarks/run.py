@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
   bench_zoo_fanout          — stacked vs unrolled ZOO fan-out, q ∈ {1,4,16}
   bench_async_scale         — device-sharded client block, block ∈ {1,4,16}
                               (subprocess: forces 8 virtual host devices)
+  bench_lm_async            — reduced transformer server under the async
+                              engine via Federation, q ∈ {1,4} + DP point
   bench_roofline            — §Roofline terms from the dry-run artifacts
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
@@ -222,6 +224,13 @@ def bench_async_scale(fast: bool):
             f"rc={proc.returncode};stderr={proc.stderr.strip()[-200:]}")
 
 
+# ================================================== LM async engine ========
+
+def bench_lm_async(fast: bool):
+    from benchmarks.lm_async import bench_lm_async as bench
+    bench(fast, row=row)
+
+
 # ======================================================== roofline =========
 
 def bench_roofline(fast: bool):
@@ -255,6 +264,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "zoo_fanout": bench_zoo_fanout,
     "async_scale": bench_async_scale,
+    "lm_async": bench_lm_async,
     "roofline": bench_roofline,
 }
 

@@ -2,7 +2,11 @@
 hybrid VFL (the distilBERT experiment of paper §VI-D-c at framework scale).
 
 The client holds the token embedding (updated with ZOO, active-row mode);
-the server holds the transformer stack (updated with FOO). Presets:
+the server holds the transformer stack (updated with FOO). Training is
+constructed through the ``repro.federation`` session API (the
+``launch/train.py`` driver wraps ``Federation.build(...).sync_step``),
+so any spelling from the method alias table works and ``--dp-epsilon``
+plugs a Gaussian DP channel into the loss downlink. Presets:
 
     ci    :  ~0.4M params,  60 steps  (seconds; used by CI)
     small :  ~20M params,  300 steps  (tens of minutes on 1 CPU core)
@@ -15,6 +19,8 @@ import dataclasses
 import json
 
 from repro.configs import ARCH_REGISTRY, ModelConfig
+from repro.core.methods import METHOD_ALIASES, canonical_method
+from repro.core.privacy import GaussianLossChannel
 from repro.launch import train as train_mod
 
 PRESETS = {
@@ -31,8 +37,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="ci", choices=sorted(PRESETS))
     ap.add_argument("--steps", type=int, default=0)
-    ap.add_argument("--method", default="cascaded")
+    ap.add_argument("--method", default="cascaded",
+                    choices=sorted(METHOD_ALIASES))
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--dp-epsilon", type=float, default=0.0,
+                    help="per-release ε for the DP loss channel (0 = off)")
     args = ap.parse_args()
 
     p = dict(PRESETS[args.preset])
@@ -48,10 +57,13 @@ def main():
     print(f"[e2e] {cfg.arch_id}: ~{n_params/1e6:.1f}M params, "
           f"{steps} steps, batch {batch}, seq {seq}")
 
+    noise = (GaussianLossChannel(clip=10.0, epsilon=args.dp_epsilon)
+             if args.dp_epsilon > 0 else None)
     res = train_mod.train(cfg.arch_id, steps=steps, batch=batch, seq=seq,
-                          method=args.method, lr=0.05, active_rows=True,
-                          use_reduced=False, log_every=max(steps // 20, 1),
-                          checkpoint_path=args.checkpoint)
+                          method=canonical_method(args.method), lr=0.05,
+                          active_rows=True, use_reduced=False,
+                          log_every=max(steps // 20, 1),
+                          checkpoint_path=args.checkpoint, noise=noise)
     res["n_params"] = n_params
     print(json.dumps(res, indent=2))
     assert res["loss_last"] < res["loss_first"]

@@ -6,8 +6,10 @@ loss over the stacked client embeddings, and (optionally) a fused
 "lanes" forward that evaluates the clean + q ZOO-perturbed client
 forwards in one pass. Packaging those as a :class:`ModelAdapter` lets the
 same jitted scan body drive ANY ``repro.models`` client/server pair — the
-paper's tabular MLP, a SwiGLU-MLP stack, or anything else that fits the
-(embedding up, loss down) wire shape.
+paper's tabular MLP, a SwiGLU-MLP stack, or (via
+:func:`from_model_config`) any registered LM-scale ``ModelConfig``: the
+clients own the embedding/bottom layers and the server owns the
+transformer/MoE/SSM backbone plus head.
 
 Adapters are frozen dataclasses so the engine can hash them as part of
 its compiled-runner cache key.
@@ -23,6 +25,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.configs.paper_mlp import PaperMLPConfig
+from repro.core import zoo
+from repro.core.partition import split_params
 from repro.kernels.zoo_dual_matmul.ops import zoo_dual_matmul_stacked
 from repro.models import common, mlp, tabular
 from repro.models.common import ParamSpec
@@ -40,6 +44,10 @@ class ModelAdapter:
     * ``client_lanes(client_m, u_stack, mu, x_m)`` (optional) -> (1+q, bs, e):
       lane 0 the clean forward, lanes 1..q the μ-perturbed forwards — the
       hook that routes the stacked ZOO fan-out through a fused kernel.
+    * ``row_mask(client_m, x_m)`` (optional) -> 0/1 row-mask pytree
+      matching ``client_m``: restricts the ZOO perturbation to the rows a
+      batch actually touches (active-row mode — shrinks the effective ZOO
+      dimension from vocab·d to uniq_tokens·d for embedding clients).
     * ``table_logical`` — per-dim logical axis names of the server's
       (M, n, e) embedding table; the engine's device-sharded path resolves
       its partitioning from these via ``repro.sharding.rules`` (the
@@ -51,6 +59,7 @@ class ModelAdapter:
     param_specs: Callable
     client_lanes: Optional[Callable] = None
     table_logical: Tuple[Optional[str], ...] = ("clients", None, None)
+    row_mask: Optional[Callable] = None
 
     def init_params(self, key):
         return common.materialize(self.param_specs(), key)
@@ -157,3 +166,145 @@ def mlp_adapter(*, n_clients: int = 4, features: int = 32,
     return ModelAdapter(name=f"mlp-{act}", client_forward=client_forward,
                         server_loss=server_loss, param_specs=param_specs,
                         table_logical=("clients", None, None))
+
+
+# ================================================= ModelConfig bridge =====
+
+# top-level param keys forming the ZOO client partition of an LM config
+# (matches model_api.Model.client_keys for the supported families)
+LM_CLIENT_KEYS = ("embed",)
+
+
+@functools.lru_cache(maxsize=None)
+def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
+                      seq_len: int = 32,
+                      active_rows: bool = True) -> ModelAdapter:
+    """Derive a :class:`ModelAdapter` for ANY decoder ``ModelConfig``.
+
+    The vertical split follows the paper's LM experiments: each of the M
+    client parties owns a disjoint span of ``seq_len / M`` token positions
+    plus its own copy of the embedding table (the bottom layer), and the
+    server owns the full transformer/MoE/SSM backbone, final norm and LM
+    head. A client's uplink "embedding" is its span's token embeddings
+    flattened to one ``(batch, span·d_model)`` vector, so the engine's
+    (M, n, e) table, staleness bookkeeping and wire accounting all apply
+    unchanged; the server loss folds the M spans back into a (batch, S,
+    d_model) sequence and runs the exact post-embedding half of
+    ``model_api.build_model(cfg).loss_fn``.
+
+    ``active_rows=True`` (default) attaches a :attr:`ModelAdapter.row_mask`
+    hook restricting each client's ZOO perturbation to the embedding rows
+    its batch actually touches — the ``active_rows``-style dimension
+    reduction of ``repro.core.zoo`` at engine scale.
+
+    ``x_parts`` for the engine are int32 token spans,
+    ``data.vertical_partition(tokens, M)``; ``y`` is the full (n, S) label
+    array. Use :func:`lm_engine_params` to map a global ``build_model``
+    parameter tree into the engine's {"clients", "server"} layout.
+
+    Limitations: encoder-decoder and VLM configs need a modality frontend
+    on the wire and are rejected; the DeepSeek MTP head consumes raw
+    tokens (which never reach the server under this protocol) and is
+    dropped from the server partition.
+    """
+    from repro.models import model_api, transformer
+    from repro.models.layers import apply_norm, embed_lookup, unembed
+    from repro.sharding.rules import shard_constraint
+
+    if cfg.is_encoder_decoder or cfg.family == "vlm":
+        raise ValueError(
+            f"from_model_config supports decoder-only families; "
+            f"{cfg.arch_id!r} (family={cfg.family!r}, "
+            f"encoder_decoder={cfg.is_encoder_decoder}) needs a modality "
+            "frontend that never crosses the VFL wire")
+    if n_clients < 1 or seq_len % n_clients:
+        raise ValueError(
+            f"seq_len={seq_len} must split evenly over "
+            f"n_clients={n_clients} token spans")
+
+    model = model_api.build_model(cfg, max_seq=seq_len)
+    client_spec, server_spec = split_params(model.param_specs,
+                                            LM_CLIENT_KEYS)
+    server_spec = {k: v for k, v in server_spec.items() if k != "mtp"}
+    span = seq_len // n_clients
+    d = cfg.d_model
+
+    def client_forward(client_m, x_m):
+        """x_m: (bs, span) int32 token slice -> (bs, span·d) embedding."""
+        e = embed_lookup(client_m["embed"], x_m, iota=cfg.iota_embed)
+        return e.reshape(x_m.shape[0], span * d)
+
+    def client_lanes(client_m, u_stack, mu, x_m):
+        """Fused clean + q perturbed fan-out. Embedding lookup is linear
+        in the table, so the q perturbed forwards are one gather into the
+        stacked direction tables instead of q re-embeddings of a perturbed
+        copy — bitwise equal to perturb-then-lookup (gather commutes with
+        the elementwise w + μu and the dtype round-trip)."""
+        clean = client_forward(client_m, x_m)                   # (bs, e)
+        u_rows = jax.vmap(
+            lambda u: embed_lookup(u["embed"], x_m))(u_stack)   # (q,bs,span,d)
+        pert = (clean[None].astype(jnp.float32)
+                + mu * u_rows.reshape(u_rows.shape[0], x_m.shape[0],
+                                      span * d)).astype(clean.dtype)
+        return jnp.concatenate([clean[None], pert], axis=0)
+
+    def server_loss(server, c_all, y_batch):
+        """c_all: (M, bs, span·d) client spans -> scalar LM loss.
+
+        Mirrors the post-embedding half of ``transformer.lm_loss`` (same
+        ops, same order) so ``global_loss`` matches ``model.loss_fn``
+        exactly when every client holds the same embedding table."""
+        M, bs, _ = c_all.shape
+        x = (c_all.reshape(M, bs, span, d)
+             .transpose(1, 0, 2, 3).reshape(bs, seq_len, d))
+        positions = jnp.arange(seq_len)
+        if "pos_embed" in server:
+            pos_table = server["pos_embed"]
+            pe = jnp.take(pos_table,
+                          jnp.clip(positions, 0, pos_table.shape[0] - 1),
+                          axis=0)
+            x = x + pe.astype(x.dtype)
+        x = shard_constraint(x, ("batch", None, "embed_act"))
+        h, _, aux = transformer.backbone_apply(cfg, server, x,
+                                               positions=positions)
+        h = apply_norm(cfg, server["final_norm"], h)
+        logits = unembed(server["lm_head"], h)
+        logits = shard_constraint(logits, ("batch", None, "vocab_act"))
+        ce = transformer.softmax_xent(logits[:, :-1], y_batch[:, 1:],
+                                      cfg.padded_vocab)
+        return jnp.mean(ce) + aux
+
+    def param_specs():
+        return {"clients": common.stack_layer_specs(client_spec, n_clients,
+                                                    axis_name="clients"),
+                "server": server_spec}
+
+    def row_mask(client_m, x_m):
+        return {"embed": {"table": zoo.embedding_row_mask(
+            x_m, client_m["embed"]["table"].shape[0])}}
+
+    return ModelAdapter(
+        name=f"lm-{cfg.arch_id}-m{n_clients}-s{seq_len}",
+        client_forward=client_forward,
+        server_loss=server_loss,
+        param_specs=param_specs,
+        client_lanes=client_lanes,
+        table_logical=("clients", None, None),
+        row_mask=row_mask if active_rows else None,
+    )
+
+
+def lm_engine_params(global_params, n_clients: int):
+    """Map a global ``build_model`` parameter tree into the engine layout.
+
+    Every client party receives the same copy of the embedding table (the
+    replicated bottom layer), stacked along a leading (M,) clients axis;
+    the server keeps everything else (minus the token-consuming MTP head).
+    With this layout ``from_model_config(...).global_loss`` equals the
+    global model's ``loss_fn`` — the bridge's equivalence anchor.
+    """
+    client, server = split_params(global_params, LM_CLIENT_KEYS)
+    clients = jax.tree.map(
+        lambda w: jnp.repeat(w[None], n_clients, axis=0), client)
+    server = {k: v for k, v in server.items() if k != "mtp"}
+    return {"clients": clients, "server": server}

@@ -17,9 +17,17 @@ Per global round t (matching Fig. 2):
 
 The model plane is abstracted behind :class:`repro.core.adapters.ModelAdapter`,
 so the same scan body drives arbitrary ``repro.models`` client/server
-pairs — not just the paper's tabular MLP. The scan body is jitted once per
-(adapter, method, vfl, block, mesh) and cached, so repeated runs
-(benchmark sweeps) skip retracing.
+pairs — the paper's tabular MLP, or any LM-scale ``ModelConfig`` via
+``adapters.from_model_config``. The wire plane is abstracted behind
+:class:`repro.federation.Transport`, which owns the ledger, canonical
+method names, and the optional DP noise hook applied to every scalar loss
+crossing the downlink (``EngineResult`` then reports the spent (ε, δ)).
+The scan body is jitted once per (adapter, transport, vfl, block, mesh)
+and cached, so repeated runs (benchmark sweeps) skip retracing.
+
+:func:`run` is the back-compat entry: it wraps a
+``repro.federation.Federation`` session (the canonical constructor) and
+is bitwise-identical to the pre-session engine at noise=0.
 
 Device-sharded client block (``mesh=`` path)
 --------------------------------------------
@@ -48,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -59,8 +68,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import VFLConfig
 from repro.core import zoo
 from repro.core.adapters import ModelAdapter, tabular_adapter
-from repro.core.methods import (SYNC_METHODS, ZOO_WIRE_METHODS,
-                                canonical_method)
+from repro.core.methods import SYNC_METHODS
 from repro.core.privacy import Ledger
 from repro.sharding.rules import PARAM_RULES, resolve_spec
 
@@ -79,6 +87,10 @@ class EngineConfig:
     # route the client's clean+perturbed fan-out through the adapter's
     # fused lanes hook (e.g. the zoo_dual_matmul Pallas kernel)
     use_lanes: bool = False
+    # >0 shards the client block + table rows over that many devices
+    # (Federation builds the ("data",) mesh via launch.mesh.make_client_mesh;
+    # must divide both block_size and the client count)
+    mesh_shards: int = 0
 
 
 @dataclasses.dataclass
@@ -87,10 +99,14 @@ class EngineResult:
     losses: np.ndarray          # (T,)
     max_delay_seen: int
     mean_delay: float
-    # wire accounting (q-aware privacy ledger threaded through run())
+    # wire accounting (q-aware privacy ledger owned by the Transport)
     wire_bytes: int = 0
     transmits_gradients: bool = False
     ledger: Optional[Ledger] = None
+    # DP budget spent on the loss downlink ((inf, 0) without a noise
+    # channel: structurally safe wire, no formal guarantee)
+    epsilon: float = math.inf
+    delta: float = 0.0
 
 
 def make_schedule(key, steps: int, n_clients: int,
@@ -133,14 +149,29 @@ def _validate_mesh(mesh: Mesh, sync: bool, method: str, block: int, M: int):
 def run(cfg_engine: EngineConfig, vfl: VFLConfig, params, x_parts, y,
         *, probs=None, adapter: Optional[ModelAdapter] = None,
         mesh: Optional[Mesh] = None) -> EngineResult:
-    """x_parts: (M, n, f) vertically partitioned features; y: (n,) labels.
+    """Back-compat wrapper over the ``repro.federation`` session API.
 
-    ``mesh``: optional ``("data",)`` mesh — shards the activated client
-    block and the embedding table rows across its devices (see module
-    docstring). Requires ``block_size % n_shards == 0`` and
-    ``M % n_shards == 0``."""
-    adapter = adapter if adapter is not None else tabular_adapter()
-    method = canonical_method(cfg_engine.method)
+    x_parts: (M, n, f) vertically partitioned features; y: (n,) labels.
+    ``mesh``: optional ``("data",)`` mesh — new callers set
+    ``EngineConfig.mesh_shards`` instead and let the session build it.
+    Bitwise-identical to ``Federation.build(...).run(...)`` at noise=0
+    (there is no noise knob here; DP runs go through the session)."""
+    from repro.federation import Federation
+    fed = Federation.build(
+        adapter if adapter is not None else tabular_adapter(),
+        vfl, cfg_engine, mesh=mesh)
+    return fed.run(params, x_parts, y, probs=probs)
+
+
+def _session_run(adapter: ModelAdapter, transport, vfl: VFLConfig,
+                 cfg_engine: EngineConfig, params, x_parts, y,
+                 *, probs=None, mesh: Optional[Mesh] = None) -> EngineResult:
+    """The engine proper, driven by a ``Federation`` session.
+
+    ``transport`` (a ``repro.federation.Transport``) supplies the
+    canonical method, the wire ledger, and the downlink noise hook; the
+    session supplies the adapter and the (already-built) mesh."""
+    method = transport.method
     M, n, f = x_parts.shape
     T, bs = cfg_engine.steps, cfg_engine.batch_size
     sync = method in SYNC_METHODS
@@ -177,41 +208,47 @@ def run(cfg_engine: EngineConfig, vfl: VFLConfig, params, x_parts, y,
                                   PARAM_RULES)
         table0 = jax.device_put(table0, NamedSharding(mesh, table_spec))
 
-    runner = _make_runner(adapter, method, vfl, sync, block,
+    runner = _make_runner(adapter, transport, vfl, sync, block,
                           cfg_engine.use_lanes, mesh, table_spec)
     (params, table, delays), (losses, maxd) = runner(
         params, table0, delays0, schedule, sample_idx, zoo_keys, x_parts, y)
 
-    ledger = Ledger()
-    q = vfl.zoo_queries if method in ZOO_WIRE_METHODS else 1
-    ledger.log_round(method, bs, int(table0.shape[-1]), zoo_queries=q,
-                     n_clients=M if sync else block, n_rounds=T)
+    # the Transport owns the q-gating (queries only fan out on ZOO wires)
+    ledger = transport.account(batch=bs, embed=int(table0.shape[-1]),
+                               zoo_queries=vfl.zoo_queries,
+                               n_clients=M if sync else block, n_rounds=T)
+    eps, delta = transport.privacy_spent(transport.releases(
+        n_rounds=T, n_clients=M if sync else block,
+        zoo_queries=vfl.zoo_queries))
 
     return EngineResult(params=params, losses=np.asarray(losses),
                         max_delay_seen=int(jnp.max(maxd)),
                         mean_delay=float(jnp.mean(delays)),
                         wire_bytes=ledger.total_bytes,
                         transmits_gradients=ledger.transmits_gradients,
-                        ledger=ledger)
+                        ledger=ledger, epsilon=eps, delta=delta)
 
 
 # ------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=64)
-def _make_runner(adapter: ModelAdapter, method: str, vfl: VFLConfig,
+def _make_runner(adapter: ModelAdapter, transport, vfl: VFLConfig,
                  sync: bool, block: int, use_lanes: bool,
                  mesh: Optional[Mesh] = None, table_spec: Optional[P] = None):
-    """Build + jit the full scan for one (adapter, method, vfl, block, mesh).
+    """Build + jit the full scan for one (adapter, transport, vfl, block,
+    mesh).
 
     lru-cached so benchmark sweeps that re-enter ``run`` with the same
-    protocol reuse the compiled executable instead of retracing."""
+    protocol reuse the compiled executable instead of retracing (the
+    Transport is a frozen value object, so a noise-channel change is a
+    cache miss and a no-noise Transport hashes like any other key)."""
     if sync:
-        step_fn = _make_sync_step(adapter, method, vfl)
+        step_fn = _make_sync_step(adapter, transport, vfl)
     elif mesh is not None:
-        step_fn = _make_sharded_step(adapter, method, vfl, use_lanes,
+        step_fn = _make_sharded_step(adapter, transport, vfl, use_lanes,
                                      mesh, block, table_spec)
     else:
-        step_fn = _make_async_step(adapter, method, vfl, use_lanes)
+        step_fn = _make_async_step(adapter, transport, vfl, use_lanes)
 
     def scan_all(params, table0, delays0, schedule, sample_idx, zoo_keys,
                  x_parts, y):
@@ -242,27 +279,44 @@ def _row_keys(key, rows):
     return jax.vmap(lambda r: jax.random.fold_in(k, r))(rows)
 
 
-def _make_client_grad_fns(adapter: ModelAdapter, method: str,
+def _make_client_grad_fns(adapter: ModelAdapter, transport,
                           vfl: VFLConfig, use_lanes: bool):
     """Per-activated-client gradient closures shared by the single-device
-    and sharded async steps (both vmap them over their block rows)."""
+    and sharded async steps (both vmap them over their block rows).
+
+    Every scalar loss the client consumes passes through
+    ``transport.downlink`` — the identity for a bare wire (same jaxpr as
+    the pre-Transport engine), clip+noise under a DP channel. Adapters
+    with a ``row_mask`` hook (active-row embedding clients) restrict the
+    ZOO perturbation to the rows the batch touches."""
     if use_lanes and adapter.client_lanes is None:
         raise ValueError(
             f"adapter {adapter.name!r} has no client_lanes hook; "
             "run with use_lanes=False")
+    if transport.noise is not None and vfl.zoo_unrolled_oracle:
+        raise ValueError(
+            "the DP loss channel requires the stacked lane path "
+            "(vfl.zoo_unrolled_oracle=False); the unrolled per-query loop "
+            "is a noise-free numerical test oracle")
+
+    def _row_mask(client_m, x_m):
+        return (adapter.row_mask(client_m, x_m)
+                if adapter.row_mask is not None else None)
 
     def client_zoo_grad(server, c_stale, m, client_m, x_m, yb, key):
         """ZOO (ours / zoo-vfl): only losses cross the wire."""
+        mask = _row_mask(client_m, x_m)
         if use_lanes:
             # stacked fan-out through the adapter's fused dual-pass (the
             # zoo_dual_matmul Pallas kernel for the tabular client)
             u_stack, d_eff = zoo.sample_directions(
-                key, client_m, vfl.zoo_queries, vfl.zoo_dist)
+                key, client_m, vfl.zoo_queries, vfl.zoo_dist, mask)
             phi = zoo.phi_factor(vfl.zoo_dist, d_eff)
             c_lanes = adapter.client_lanes(client_m, u_stack, vfl.mu, x_m)
             losses = jax.vmap(
                 lambda cf: adapter.server_loss(server, c_stale.at[m].set(cf),
                                                yb))(c_lanes)
+            losses = transport.downlink(losses, key)
             return zoo.grad_from_losses(u_stack, losses[1:], losses[0],
                                         vfl.mu, phi)
 
@@ -270,10 +324,23 @@ def _make_client_grad_fns(adapter: ModelAdapter, method: str,
             cb = c_stale.at[m].set(adapter.client_forward(cm, x_m))
             return adapter.server_loss(server, cb, yb)
 
-        g, _, _ = zoo.zoo_gradient(key, c_loss, client_m, vfl.mu,
-                                   vfl.zoo_dist, vfl.zoo_queries,
-                                   unrolled=vfl.zoo_unrolled_oracle)
-        return g
+        if transport.noise is None:
+            g, _, _ = zoo.zoo_gradient(key, c_loss, client_m, vfl.mu,
+                                       vfl.zoo_dist, vfl.zoo_queries,
+                                       row_mask=mask,
+                                       unrolled=vfl.zoo_unrolled_oracle)
+            return g
+        # noised wire: evaluate the (1+q) lanes explicitly so the noise
+        # lands on the transmitted losses, not inside the oracle (same
+        # direction draws as zoo_gradient's stacked path at a fixed key)
+        u_stack, d_eff = zoo.sample_directions(
+            key, client_m, vfl.zoo_queries, vfl.zoo_dist, mask)
+        phi = zoo.phi_factor(vfl.zoo_dist, d_eff)
+        lanes = zoo.stack_lanes(client_m, u_stack, vfl.mu)
+        losses = jax.vmap(c_loss)(lanes)
+        losses = transport.downlink(losses, key)
+        return zoo.grad_from_losses(u_stack, losses[1:], losses[0],
+                                    vfl.mu, phi)
 
     def client_foo_grad(server, c_stale, m, client_m, x_m, yb):
         """VAFL (privacy-leaky): server sends ∂L/∂c_m; client backprops."""
@@ -303,15 +370,17 @@ def _server_update(adapter: ModelAdapter, method: str, vfl: VFLConfig,
             vfl.zoo_dist, vfl.zoo_queries,
             unrolled=vfl.zoo_unrolled_oracle)
     server = jax.tree.map(
-        lambda w, g: w - vfl.lr_server * g, server, g_server)
+        lambda w, g: (w - vfl.lr_server * g).astype(w.dtype), server,
+        g_server)
     return server, h
 
 
-def _make_async_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
+def _make_async_step(adapter: ModelAdapter, transport, vfl: VFLConfig,
                      use_lanes: bool):
     """One asynchronous round for the activated client block {m_t}."""
+    method = transport.method
     client_zoo_grad, client_foo_grad = _make_client_grad_fns(
-        adapter, method, vfl, use_lanes)
+        adapter, transport, vfl, use_lanes)
 
     def step(params, table, m_blk, idx, key, x_parts, y):
         clients, server = params["clients"], params["server"]
@@ -341,7 +410,8 @@ def _make_async_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
                                                      xm, yb, k)
             )(m_blk, client_blk, x_blk, keys)
         new_client_blk = jax.tree.map(
-            lambda cm, g: cm - vfl.lr_client * g, client_blk, g_blk)
+            lambda cm, g: (cm - vfl.lr_client * g).astype(cm.dtype),
+            client_blk, g_blk)
         clients = jax.tree.map(
             lambda all_, new: all_.at[m_blk].set(new), clients,
             new_client_blk)
@@ -353,7 +423,7 @@ def _make_async_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
     return step
 
 
-def _make_sharded_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
+def _make_sharded_step(adapter: ModelAdapter, transport, vfl: VFLConfig,
                        use_lanes: bool, mesh: Mesh, block: int,
                        table_spec: P):
     """Device-sharded asynchronous round: the block's R activated clients
@@ -361,8 +431,9 @@ def _make_sharded_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
     and cross-device traffic happens only at the server-loss boundary
     (all_gather) plus one float-exact psum replicating the sparse client
     updates. See module docstring for the equivalence guarantees."""
+    method = transport.method
     client_zoo_grad, client_foo_grad = _make_client_grad_fns(
-        adapter, method, vfl, use_lanes)
+        adapter, transport, vfl, use_lanes)
     D = mesh.shape[CLIENT_AXIS]
     rows_local = block // D
 
@@ -406,7 +477,8 @@ def _make_sharded_step(adapter: ModelAdapter, method: str, vfl: VFLConfig,
                                                      xm, yb, k)
             )(m_blk_l, client_blk, x_blk, keys)
         new_client_blk = jax.tree.map(
-            lambda cm, g: cm - vfl.lr_client * g, client_blk, g_blk)
+            lambda cm, g: (cm - vfl.lr_client * g).astype(cm.dtype),
+            client_blk, g_blk)
 
         # replicate the sparse update: activated clients are DISTINCT, so
         # each global row is written by exactly one shard and the psum of
@@ -451,8 +523,9 @@ def _stack_rows(clients) -> int:
     return jax.tree.leaves(clients)[0].shape[0]
 
 
-def _make_sync_step(adapter: ModelAdapter, method: str, vfl: VFLConfig):
+def _make_sync_step(adapter: ModelAdapter, transport, vfl: VFLConfig):
     """Synchronous rounds: Split-Learning (FOO) / Syn-ZOO-VFL."""
+    method = transport.method
 
     def step(params, table, m_blk, idx, key, x_parts, y):
         xb = x_parts[:, idx, :]                          # (M, bs, f)
@@ -467,7 +540,8 @@ def _make_sync_step(adapter: ModelAdapter, method: str, vfl: VFLConfig):
                 vfl.mu, vfl.zoo_dist, vfl.zoo_queries,
                 unrolled=vfl.zoo_unrolled_oracle)
         params = jax.tree.map(
-            lambda w, g: w - vfl.lr_server * g, params, grads)
+            lambda w, g: (w - vfl.lr_server * g).astype(w.dtype), params,
+            grads)
         return params, table, h
 
     return step

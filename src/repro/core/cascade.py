@@ -52,13 +52,24 @@ def _maybe_row_mask(cfg_vfl: VFLConfig, client, batch, vocab: int):
 
 def make_cascaded_step(loss_fn: Callable, client_keys: Tuple[str, ...],
                        vfl: VFLConfig, optimizer,
-                       vocab: int = 0) -> Callable:
+                       vocab: int = 0, transport=None) -> Callable:
     """Build the jittable cascaded hybrid step.
 
     loss_fn(params, batch) -> (loss, aux).  optimizer: repro.optim object
     with ``init(params)`` / ``update(grads, state, params)``.
     Returns step(params, opt_state, batch, key) -> (params, opt_state, StepOutput).
+
+    ``transport`` (a ``repro.federation.Transport``) optionally noises the
+    scalar losses the CLIENT receives over the downlink before it forms
+    its ZOO gradient (Eq. 3); the server's FOO step keeps the exact local
+    loss — only the wire is perturbed, matching the async engine.
     """
+    if transport is not None and transport.noise is not None \
+            and not vfl.fused_dual:
+        raise ValueError(
+            "the DP loss channel requires the fused lane path "
+            "(vfl.fused_dual=True); the unrolled per-query loop is a "
+            "noise-free numerical test oracle")
 
     def step(params, opt_state, batch, key):
         client, server = split_params(params, client_keys)
@@ -87,7 +98,11 @@ def make_cascaded_step(loss_fn: Callable, client_keys: Tuple[str, ...],
 
             (loss_clean, losses), g_server = jax.value_and_grad(
                 server_loss, has_aux=True)(server)
-            g_client = zoo.grad_from_losses(u_stack, losses[1:], loss_clean,
+            # the client builds Eq. 3 from the losses it RECEIVES — under
+            # a DP transport those are the clipped+noised downlink values
+            recv = (losses if transport is None
+                    else transport.downlink(losses, key))
+            g_client = zoo.grad_from_losses(u_stack, recv[1:], recv[0],
                                             vfl.mu, phi)
             loss_pert = losses[1]
         else:
@@ -133,17 +148,30 @@ def make_cascaded_step(loss_fn: Callable, client_keys: Tuple[str, ...],
 
 
 def make_step_for_method(method: str, loss_fn, client_keys, vfl: VFLConfig,
-                         optimizer, vocab: int = 0):
+                         optimizer, vocab: int = 0, transport=None):
     """Factory covering the paper's five frameworks at step granularity.
 
     cascaded      : ZOO client + FOO server   (ours)
     vafl / split  : FOO client + FOO server   (privacy-leaky upper bound)
     zoo-vfl / syn-zoo : ZOO client + ZOO server
     (sync-vs-async semantics live in repro.core.async_engine; spellings
-    normalize through repro.core.methods so the three modules agree)."""
+    normalize through repro.core.methods so the three modules agree).
+
+    ``transport`` optionally carries the DP loss channel (cascaded only at
+    step granularity; the other ZOO methods noise through the async
+    engine)."""
     method = canonical_method(method)
+    if transport is not None and transport.method != method:
+        raise ValueError(f"transport method {transport.method!r} does not "
+                         f"match step method {method!r}")
     if method == "cascaded":
-        return make_cascaded_step(loss_fn, client_keys, vfl, optimizer, vocab)
+        return make_cascaded_step(loss_fn, client_keys, vfl, optimizer,
+                                  vocab, transport)
+    if transport is not None and transport.noise is not None:
+        raise NotImplementedError(
+            f"the DP loss channel is wired into the cascaded step factory "
+            f"and the async engine; for {method!r} run through "
+            "Federation.run")
     if method in ("vafl", "split"):
         return make_foo_step(loss_fn, optimizer)
     assert method in ("zoo-vfl", "syn-zoo"), method

@@ -1,4 +1,4 @@
-"""Communication & privacy ledger.
+"""Communication & privacy ledger, plus the DP loss channel.
 
 Static, per-round accounting of *what crosses the wire* under each
 framework — the paper's security argument (§V) is structural: ZOO modes
@@ -12,12 +12,23 @@ returns the clean loss h plus q perturbed losses ĥ_i — so the perturbed
 traffic scales exactly linearly in q while the clean messages do not.
 Method spellings are normalized through :mod:`repro.core.methods`, so
 every name accepted by ``cascade``/``async_engine`` is accepted here.
+
+:class:`GaussianLossChannel` upgrades the structural argument to a formal
+(ε, δ) one (DPZV-style): the only server→client payload under a ZOO wire
+is a handful of scalar losses, so clipping each scalar and adding
+calibrated Gaussian noise makes every downlink a release of the Gaussian
+mechanism. ``repro.federation.Transport`` plugs the channel into the
+engines; the channel itself is pure config + math so it hashes into the
+compiled-runner cache key.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.methods import (FOO_WIRE_METHODS, ZOO_WIRE_METHODS,
@@ -95,3 +106,65 @@ class Ledger:
         for m in self.messages:
             out[m.kind] = out.get(m.kind, 0) + m.nbytes
         return out
+
+
+# ==================================================== DP loss channel ======
+
+@dataclasses.dataclass(frozen=True)
+class GaussianLossChannel:
+    """Calibrated Gaussian noise on the scalar-loss downlink.
+
+    Every scalar loss the server sends down is clamped to ``[0, clip]``
+    (CE/hinge losses are non-negative; the clamp bounds one release's
+    sensitivity by ``clip``) and perturbed with ``N(0, σ²)``, where σ is
+    calibrated so ONE release satisfies (``epsilon``, ``delta``)-DP by the
+    classic Gaussian-mechanism bound
+
+        σ = clip · √(2 ln(1.25/δ)) / ε          (Dwork & Roth, Thm A.1).
+
+    :meth:`spent` composes the per-release budget over a run's k releases
+    with a simple moments-style accountant: the better of basic
+    composition (kε, kδ) and advanced composition
+    (ε√(2k ln(1/δ)) + kε(eᵉ−1),  (k+1)δ) — exact enough to report an
+    honest finite budget without an external DP library.
+
+    The channel is deliberately a frozen value object: the async engine
+    hashes it (inside ``federation.Transport``) as part of its compiled
+    runner cache key, and ``apply`` is pure so it can live inside the
+    jitted scan body.
+    """
+    clip: float = 10.0
+    epsilon: float = 1.0          # per-release ε target
+    delta: float = 1e-5           # per-release δ target
+
+    def __post_init__(self):
+        if self.clip <= 0 or self.epsilon <= 0 or not 0 < self.delta < 1:
+            raise ValueError(
+                f"need clip > 0, epsilon > 0, 0 < delta < 1; got "
+                f"clip={self.clip}, epsilon={self.epsilon}, "
+                f"delta={self.delta}")
+
+    @property
+    def sigma(self) -> float:
+        """Noise stddev calibrated to the per-release (ε, δ) target."""
+        return (self.clip * math.sqrt(2.0 * math.log(1.25 / self.delta))
+                / self.epsilon)
+
+    def apply(self, losses, key):
+        """Clip + noise a (vector of) scalar loss(es) crossing the wire."""
+        clipped = jnp.clip(losses, 0.0, self.clip)
+        return clipped + self.sigma * jax.random.normal(
+            key, jnp.shape(losses), jnp.result_type(losses, jnp.float32))
+
+    def spent(self, n_releases: int) -> Tuple[float, float]:
+        """Total (ε, δ) after ``n_releases`` downlink scalars."""
+        k = int(n_releases)
+        if k <= 0:
+            return 0.0, 0.0
+        basic = (k * self.epsilon, k * self.delta)
+        advanced = (
+            self.epsilon * math.sqrt(2.0 * k * math.log(1.0 / self.delta))
+            + k * self.epsilon * (math.exp(self.epsilon) - 1.0),
+            (k + 1) * self.delta,
+        )
+        return min(basic, advanced, key=lambda ed: ed[0])

@@ -1,0 +1,41 @@
+"""One federation API: sessions over models, transports over wires.
+
+Every entry point — ``launch/train.py``, the examples, the benchmarks,
+and the back-compat ``async_engine.run`` shim — constructs training the
+same way now:
+
+    from repro.federation import Federation, Transport
+    fed = Federation.build(model_cfg, vfl_cfg, engine_cfg)
+    result = fed.run(params, x_parts, y)        # async protocol (staleness)
+    step   = fed.sync_step(optimizer)           # jitted cascade step
+
+``model_cfg`` is ANY of: a ready ``ModelAdapter``, the paper's
+``PaperMLPConfig``, or a registered LM-scale ``ModelConfig`` (the
+``adapters.from_model_config`` bridge derives the embedding-client /
+backbone-server split automatically). The wire is a first-class
+:class:`Transport` owning the privacy ledger, canonical method names and
+the DP noise hook on the scalar-loss downlink
+(``repro.core.privacy.GaussianLossChannel``).
+
+Migration table (old call → session call)
+-----------------------------------------
+
+===============================================  =============================================================
+old                                              new
+===============================================  =============================================================
+``async_engine.run(ec, vfl, p, X, y)``           ``Federation.build(adapter_or_cfg, vfl, ec).run(p, X, y)``
+``async_engine.run(..., adapter=ad)``            ``Federation.build(ad, vfl, ec).run(...)``
+``async_engine.run(..., mesh=make_client_mesh(D))``  ``Federation.build(..., EngineConfig(mesh_shards=D)).run(...)``
+``make_step_for_method(m, model.loss_fn, ...)``  ``Federation.build(model_cfg, vfl, EngineConfig(method=m), seq_len=S).sync_step(opt)``
+``Ledger(); ledger.log_round(m, ...)``           ``fed.transport.account(batch=..., embed=..., ...)``
+(no DP story)                                    ``Federation.build(..., noise=GaussianLossChannel(clip, ε, δ))``
+===============================================  =============================================================
+
+The old spellings keep working: ``async_engine.run`` is a thin wrapper
+over a session, bitwise-identical at noise=0.
+"""
+from repro.core.privacy import GaussianLossChannel
+from repro.federation.session import Federation
+from repro.federation.transport import Transport
+
+__all__ = ["Federation", "GaussianLossChannel", "Transport"]

@@ -1,0 +1,171 @@
+"""The ``Federation`` session: one constructor for every training plane.
+
+``Federation.build(model_cfg, vfl_cfg, engine_cfg)`` resolves the three
+orthogonal choices every entry point used to wire by hand —
+
+* the MODEL plane: a :class:`repro.core.adapters.ModelAdapter` (given
+  directly, derived from a ``PaperMLPConfig``, or derived from any
+  registered LM-scale ``ModelConfig`` via ``adapters.from_model_config``),
+* the WIRE: a :class:`repro.federation.Transport` (canonical method name,
+  ledger ownership, optional DP noise channel on the loss downlink),
+* the EXECUTION substrate: the device-sharded client mesh, picked from
+  ``engine_cfg.mesh_shards`` instead of a loose ``mesh=`` kwarg —
+
+and both protocol drivers run off the same session object:
+:meth:`Federation.run` for the asynchronous engine (staleness semantics,
+``lax.scan``), :meth:`Federation.sync_step` for the jitted cascade step
+factories that ``launch/train.py`` drives over real batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, VFLConfig
+from repro.configs.paper_mlp import PaperMLPConfig
+from repro.core import async_engine, cascade
+from repro.core.adapters import (ModelAdapter, from_model_config,
+                                 lm_engine_params, tabular_adapter)
+from repro.core.methods import canonical_method
+from repro.core.privacy import GaussianLossChannel
+from repro.federation.transport import Transport
+from repro.launch.mesh import make_client_mesh
+from repro.models import model_api
+
+ModelLike = Union[ModelAdapter, ModelConfig, PaperMLPConfig]
+
+
+@dataclasses.dataclass
+class Federation:
+    """A built training session; construct via :meth:`build`."""
+    vfl: VFLConfig
+    engine: async_engine.EngineConfig
+    transport: Transport
+    mesh: Optional[Mesh] = None
+    # set for ModelConfig-built sessions (the sync-driver plane)
+    model_cfg: Optional[ModelConfig] = None
+    n_clients: int = 2
+    seq_len: int = 32
+    _adapter: Optional[ModelAdapter] = None
+    _model: Optional[model_api.Model] = None
+
+    # ----------------------------------------------------------- build ----
+    @classmethod
+    def build(cls, model_cfg: ModelLike,
+              vfl_cfg: Optional[VFLConfig] = None,
+              engine_cfg: Optional[async_engine.EngineConfig] = None, *,
+              noise: Optional[GaussianLossChannel] = None,
+              transport: Optional[Transport] = None,
+              mesh: Optional[Mesh] = None,
+              n_clients: int = 2, seq_len: int = 32) -> "Federation":
+        """One constructor for every entry point.
+
+        ``model_cfg`` may be a ready :class:`ModelAdapter`, the paper's
+        ``PaperMLPConfig`` (tabular protocol), or any ``ModelConfig`` from
+        the arch registry (clients own the embedding, server owns the
+        backbone; ``n_clients``/``seq_len`` size the vertical token
+        split). ``noise`` plugs a DP channel into the transport's loss
+        downlink. ``mesh`` is normally derived from
+        ``engine_cfg.mesh_shards``; passing an explicit ``Mesh`` is the
+        back-compat escape hatch ``async_engine.run`` uses.
+        """
+        vfl = vfl_cfg if vfl_cfg is not None else VFLConfig()
+        engine = (engine_cfg if engine_cfg is not None
+                  else async_engine.EngineConfig())
+        if transport is None:
+            transport = Transport(engine.method, noise=noise)
+        elif noise is not None:
+            raise ValueError("pass noise= or a full transport=, not both")
+        if canonical_method(engine.method) != transport.method:
+            raise ValueError(
+                f"engine_cfg.method {engine.method!r} and transport method "
+                f"{transport.method!r} disagree")
+        if mesh is not None and engine.mesh_shards:
+            raise ValueError(
+                f"both an explicit mesh= and engine_cfg.mesh_shards="
+                f"{engine.mesh_shards} were given; set one (mesh_shards is "
+                "the session-native spelling)")
+        if mesh is None and engine.mesh_shards:
+            mesh = make_client_mesh(engine.mesh_shards)
+
+        adapter = cfg = None
+        if isinstance(model_cfg, ModelAdapter):
+            adapter = model_cfg
+        elif isinstance(model_cfg, PaperMLPConfig):
+            adapter = tabular_adapter(model_cfg)
+            n_clients = model_cfg.n_clients
+        elif isinstance(model_cfg, ModelConfig):
+            cfg = model_cfg
+        else:
+            raise TypeError(
+                f"model_cfg must be a ModelAdapter, PaperMLPConfig or "
+                f"ModelConfig, got {type(model_cfg).__name__}")
+        return cls(vfl=vfl, engine=engine, transport=transport, mesh=mesh,
+                   model_cfg=cfg, n_clients=n_clients,
+                   seq_len=seq_len, _adapter=adapter)
+
+    # ------------------------------------------------------- model plane --
+    @property
+    def adapter(self) -> ModelAdapter:
+        """The session's ModelAdapter (derived lazily for ModelConfig
+        sessions — families without an async bridge, e.g. encoder-decoder,
+        can still drive the sync path). ``vfl.active_rows_only`` gates the
+        active-row ZOO mask, matching the sync plane's semantics; the
+        derivation is re-resolved per access (``from_model_config`` is
+        lru-cached) so a ``fed.vfl`` update never serves a stale mask."""
+        if self._adapter is not None:
+            return self._adapter
+        return from_model_config(
+            self.model_cfg, n_clients=self.n_clients, seq_len=self.seq_len,
+            active_rows=self.vfl.active_rows_only)
+
+    @property
+    def model(self) -> Optional[model_api.Model]:
+        """The global model (sync-driver plane); built lazily so
+        async-only sessions never construct it."""
+        if self._model is None and self.model_cfg is not None:
+            self._model = model_api.build_model(self.model_cfg,
+                                                max_seq=self.seq_len)
+        return self._model
+
+    def init_params(self, key):
+        """Engine-layout params ({"clients": (M, ...), "server": ...})."""
+        return self.adapter.init_params(key)
+
+    def params_from_global(self, global_params):
+        """Replicate a global ``build_model`` param tree into the engine
+        layout (each client party gets the same embedding table)."""
+        if self.model_cfg is None:
+            raise ValueError("params_from_global needs a ModelConfig-built "
+                             "session (tabular/adapter sessions already use "
+                             "the engine layout)")
+        return lm_engine_params(global_params, self.n_clients)
+
+    # ------------------------------------------------------ async driver --
+    def run(self, params, x_parts, y, *, probs=None
+            ) -> async_engine.EngineResult:
+        """Asynchronous protocol simulation (staleness, blocks, sharding).
+
+        ``x_parts``: (M, n, f) vertically partitioned features — token
+        spans (int32) for LM sessions; ``y``: (n,) labels, or (n, S)
+        next-token labels for LM sessions."""
+        return async_engine._session_run(
+            self.adapter, self.transport, self.vfl, self.engine,
+            params, x_parts, y, probs=probs, mesh=self.mesh)
+
+    # ------------------------------------------------------- sync driver --
+    def sync_step(self, optimizer, *, vocab: Optional[int] = None):
+        """Jitted cascade/baseline step over the GLOBAL model's loss —
+        the ``launch/train.py`` plane. Requires a ModelConfig session."""
+        if self.model_cfg is None:
+            raise ValueError(
+                "sync_step drives a global-model loss; build the session "
+                "from a ModelConfig (tabular/adapter sessions train through "
+                "Federation.run)")
+        vocab = self.model_cfg.padded_vocab if vocab is None else vocab
+        return cascade.make_step_for_method(
+            self.transport.method, self.model.loss_fn,
+            self.model.client_keys, self.vfl, optimizer, vocab=vocab,
+            transport=self.transport)

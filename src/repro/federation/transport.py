@@ -1,0 +1,100 @@
+"""The wire as a first-class object.
+
+Every byte that crosses the party boundary — embeddings up, scalar losses
+(or, for the leaky FOO baselines, partial derivatives) down — is owned by
+a :class:`Transport`: it resolves the protocol's canonical method name
+once (``repro.core.methods``), builds the q-aware :class:`privacy.Ledger`
+for a run, and exposes the ONE mutation point the protocol allows on the
+downlink: a pluggable noise hook on the scalar-loss channel
+(:class:`repro.core.privacy.GaussianLossChannel`, DPZV-style).
+
+``Transport`` is a frozen value object: the async engine hashes it into
+its compiled-runner cache key, and :meth:`downlink` is pure (identity when
+no channel is configured — the trace is bitwise identical to the
+pre-Transport engine), so it can sit inside the jitted scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.methods import (SYNC_METHODS, ZOO_WIRE_METHODS,
+                                canonical_method)
+from repro.core.privacy import GaussianLossChannel, Ledger
+
+# fold_in salt deriving the downlink-noise key from a round/row key (2 is
+# taken by the engine's per-row direction RNG; keep them disjoint)
+NOISE_SALT = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """Wire protocol of one federation: canonical method + noise hook."""
+    method: str = "cascaded"
+    noise: Optional[GaussianLossChannel] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "method", canonical_method(self.method))
+        if self.noise is not None:
+            if self.method not in ZOO_WIRE_METHODS:
+                raise ValueError(
+                    f"the DP loss channel applies to the scalar-loss "
+                    f"downlink of ZOO-wire methods; {self.method!r} sends "
+                    "partial derivatives down (nothing to clip+noise)")
+            if self.method in SYNC_METHODS:
+                raise ValueError(
+                    f"the sync simulation of {self.method!r} shares one "
+                    "global ZOO draw across parties — per-client downlink "
+                    "noise is only meaningful for the asynchronous methods")
+
+    # ------------------------------------------------------- wire shape --
+    @property
+    def sync(self) -> bool:
+        return self.method in SYNC_METHODS
+
+    @property
+    def zoo_wire(self) -> bool:
+        return self.method in ZOO_WIRE_METHODS
+
+    # ---------------------------------------------------------- downlink --
+    def downlink(self, losses, key):
+        """The scalar-loss downlink hook (server -> client).
+
+        Identity when no noise channel is configured (same jaxpr as a bare
+        wire); otherwise clips + noises every scalar crossing down. Call
+        with the round/row key — the noise stream is derived via a
+        dedicated fold_in salt so direction draws are unchanged."""
+        if self.noise is None:
+            return losses
+        return self.noise.apply(losses, jax.random.fold_in(key, NOISE_SALT))
+
+    # --------------------------------------------------------- accounting --
+    def account(self, *, batch: int, embed: int, zoo_queries: int = 1,
+                n_clients: int = 1, n_rounds: int = 1) -> Ledger:
+        """Build the run's wire ledger (the Transport owns accounting)."""
+        ledger = Ledger()
+        ledger.log_round(self.method, batch, embed,
+                         zoo_queries=zoo_queries if self.zoo_wire else 1,
+                         n_clients=n_clients, n_rounds=n_rounds)
+        return ledger
+
+    def releases(self, *, n_rounds: int, n_clients: int = 1,
+                 zoo_queries: int = 1) -> int:
+        """Gaussian-mechanism releases in a run: each activated client
+        receives (1 clean + q perturbed) noised scalars per round. The
+        single source of truth for the accountant's composition count."""
+        if not self.zoo_wire:
+            return 0
+        return n_rounds * n_clients * (1 + zoo_queries)
+
+    def privacy_spent(self, n_releases: int) -> Tuple[float, float]:
+        """Total (ε, δ) after ``n_releases`` noised downlink scalars.
+
+        (inf, 0) without a channel: the wire is structurally safe (§V)
+        but carries no formal DP guarantee."""
+        if self.noise is None:
+            return math.inf, 0.0
+        return self.noise.spent(n_releases)

@@ -5,8 +5,16 @@ optimization (ZOO client / FOO server) — or any baseline method — on
 synthetic LM data. On CPU this runs the reduced configs (smoke/examples);
 on a real cluster the same code path drives the production mesh.
 
+Training is constructed through the ``repro.federation`` session API:
+``Federation.build(cfg, vfl, engine_cfg)`` resolves the model plane, the
+canonical method name and the wire (ledger + optional DP noise channel),
+and this driver just pumps batches through ``fed.sync_step(...)``. The
+CLI accepts every spelling in ``repro.core.methods.METHOD_ALIASES`` and
+canonicalizes at the boundary — step factories and the ledger only ever
+see canonical names.
+
     PYTHONPATH=src python -m repro.launch.train --arch phi3-mini-3.8b \
-        --reduced --steps 100 --method cascaded
+        --reduced --steps 100 --method cascaded [--dp-epsilon 1.0]
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ import argparse
 import dataclasses
 import json
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,14 +30,15 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import VFLConfig, get_config, list_archs, reduced
-from repro.core.cascade import make_step_for_method
-from repro.core.privacy import Ledger
+from repro.core.async_engine import EngineConfig
+from repro.core.methods import METHOD_ALIASES, canonical_method
+from repro.core.privacy import GaussianLossChannel
 from repro.data import lm_token_batches
+from repro.federation import Federation
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import common
-from repro.models.model_api import build_model
 from repro.optim import make_schedule, sgd
-from repro.sharding.rules import ACT_RULES, PARAM_RULES
+from repro.sharding.rules import PARAM_RULES
 
 
 def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
@@ -36,28 +46,35 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
           lr_client: float = 0.0, use_reduced: bool = True, seed: int = 0,
           log_every: int = 10, zoo_queries: int = 1,
           active_rows: bool = False, production_mesh: bool = False,
-          checkpoint_path: str = "", schedule: str = "constant") -> dict:
+          checkpoint_path: str = "", schedule: str = "constant",
+          noise: Optional[GaussianLossChannel] = None) -> dict:
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg)
-    model = build_model(cfg, max_seq=seq)
+    method = canonical_method(method)
 
     mesh = make_production_mesh() if production_mesh else make_host_mesh()
+    vfl = VFLConfig(mu=mu, lr_server=lr, lr_client=lr_client or lr,
+                    zoo_queries=zoo_queries, active_rows_only=active_rows)
+    fed = Federation.build(cfg, vfl,
+                           EngineConfig(method=method, steps=steps,
+                                        batch_size=batch),
+                           seq_len=seq, noise=noise)
+    model = fed.model
     if not lr_client:
         # per-party lr (paper §VI-A-d tunes them separately): the sphere
         # two-point estimator's norm scales ~√d·|∇|, so normalize the
         # client lr by √d_client to keep update magnitudes FOO-comparable
-        from repro.core.partition import split_params, tree_dim
+        from repro.core.partition import split_params
         client_spec, _ = split_params(model.param_specs, model.client_keys)
         d_client = sum(int(np.prod(s.shape))
                        for s in jax.tree.leaves(
                            client_spec, is_leaf=lambda x: hasattr(x, "logical")))
         lr_client = lr / max(np.sqrt(d_client), 1.0)
-    vfl = VFLConfig(mu=mu, lr_server=lr, lr_client=lr_client,
-                    zoo_queries=zoo_queries, active_rows_only=active_rows)
+        vfl = dataclasses.replace(vfl, lr_client=lr_client)
+        fed.vfl = vfl
     opt = sgd(make_schedule(schedule, lr, total_steps=steps))
-    step_fn = make_step_for_method(method, model.loss_fn, model.client_keys,
-                                   vfl, opt, vocab=cfg.padded_vocab)
+    step_fn = fed.sync_step(opt)
 
     key = jax.random.key(seed)
     params = common.materialize(model.param_specs, key)
@@ -66,7 +83,6 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
     opt_state = opt.init(params)
 
     data = lm_token_batches(seed + 1, cfg.vocab_size, batch, seq)
-    ledger = Ledger()
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
 
     losses, t0 = [], time.time()
@@ -84,8 +100,6 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
                     (batch, cfg.encoder_seq, cfg.frontend_dim), jnp.bfloat16)
             params, opt_state, out = jit_step(
                 params, opt_state, b, jax.random.fold_in(key, i))
-            ledger.log_round(method, batch, cfg.d_model,
-                             zoo_queries=zoo_queries)
             losses.append(float(out.loss))
             if i % log_every == 0:
                 print(f"step {i:5d} loss {losses[-1]:.4f} "
@@ -93,6 +107,10 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
                       f"|g_s|={float(out.grad_server_norm):.3e}", flush=True)
 
     wall = time.time() - t0
+    # the Transport owns the wire: one ledger call covers the run (one
+    # activated client party — the embedding owner — per sync round)
+    ledger = fed.transport.account(batch=batch, embed=cfg.d_model,
+                                   zoo_queries=zoo_queries, n_rounds=steps)
     result = {
         "arch": arch, "method": method, "steps": steps,
         "loss_first": losses[0], "loss_last": float(np.mean(losses[-5:])),
@@ -101,6 +119,10 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
         "wire_bytes_per_round": ledger.total_bytes // max(steps, 1),
         "wire_has_gradients": ledger.transmits_gradients,
     }
+    if noise is not None:
+        eps, delta = fed.transport.privacy_spent(
+            fed.transport.releases(n_rounds=steps, zoo_queries=zoo_queries))
+        result["dp_epsilon"], result["dp_delta"] = eps, delta
     if checkpoint_path:
         save_checkpoint(checkpoint_path, params, step=steps,
                         metadata={"arch": arch, "method": method})
@@ -108,13 +130,15 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
     return result
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """CLI (factored out so tests can assert the alias surface)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-mini-3.8b",
                     choices=list_archs())
+    # every spelling in the shared alias table is accepted; only the
+    # canonical name travels past this boundary
     ap.add_argument("--method", default="cascaded",
-                    choices=["cascaded", "vafl", "split-learning", "zoo-vfl",
-                             "syn-zoo-vfl"])
+                    choices=sorted(METHOD_ALIASES))
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -127,13 +151,25 @@ def main():
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--schedule", default="constant")
-    args = ap.parse_args()
+    # DP loss channel (0 = off): clip + per-release (ε, δ) target
+    ap.add_argument("--dp-epsilon", type=float, default=0.0)
+    ap.add_argument("--dp-delta", type=float, default=1e-5)
+    ap.add_argument("--dp-clip", type=float, default=10.0)
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
+    noise = (GaussianLossChannel(clip=args.dp_clip, epsilon=args.dp_epsilon,
+                                 delta=args.dp_delta)
+             if args.dp_epsilon > 0 else None)
     res = train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
-                method=args.method, lr=args.lr, mu=args.mu,
+                method=canonical_method(args.method), lr=args.lr, mu=args.mu,
                 use_reduced=args.reduced, zoo_queries=args.zoo_queries,
                 active_rows=args.active_rows,
                 production_mesh=args.production_mesh,
-                checkpoint_path=args.checkpoint, schedule=args.schedule)
+                checkpoint_path=args.checkpoint, schedule=args.schedule,
+                noise=noise)
     print(json.dumps(res, indent=2))
 
 

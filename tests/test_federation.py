@@ -1,0 +1,232 @@
+"""Federation session API: back-compat equivalence, Transport semantics,
+and the DP loss channel (GaussianLossChannel + accountant)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import VFLConfig
+from repro.configs.paper_mlp import PaperMLPConfig
+from repro.core import async_engine, cascade
+from repro.core.methods import METHOD_ALIASES
+from repro.core.privacy import GaussianLossChannel, round_messages
+from repro.data import make_classification, vertical_partition
+from repro.federation import Federation, Transport
+from repro.launch.train import build_parser
+from repro.models import common, tabular
+from repro.optim import sgd
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = PaperMLPConfig(n_features=32, n_classes=4, n_clients=4,
+                         client_embed=16, server_embed=32)
+    X, y = make_classification(0, 256, cfg.n_features, cfg.n_classes)
+    Xp = jnp.asarray(vertical_partition(X, cfg.n_clients))
+    params = common.materialize(tabular.param_specs(cfg), jax.random.key(0))
+    return cfg, Xp, jnp.asarray(y), params
+
+
+VFL = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=0.05)
+CHANNEL = GaussianLossChannel(clip=5.0, epsilon=0.5, delta=1e-5)
+
+
+# ------------------------------------------------- back-compat shims ------
+
+def test_session_bitwise_matches_engine_run(setup):
+    """ISSUE acceptance: the tabular path through the new session API is
+    bitwise-equal to the pre-redesign ``async_engine.run`` at noise=0."""
+    cfg, Xp, y, params = setup
+    ec = async_engine.EngineConfig(method="cascaded", steps=40, batch_size=8)
+    old = async_engine.run(ec, VFL, params, Xp, y)
+    new = Federation.build(cfg, VFL, ec).run(params, Xp, y)
+    assert np.array_equal(old.losses, new.losses)
+    for a, b in zip(jax.tree.leaves(old.params), jax.tree.leaves(new.params)):
+        assert jnp.array_equal(a, b)
+    assert old.wire_bytes == new.wire_bytes
+    assert old.epsilon == new.epsilon == math.inf
+
+
+def test_session_mesh_from_engine_cfg(setup):
+    """The sharded path is picked from EngineConfig.mesh_shards, not a
+    loose mesh= kwarg — and a 1-shard mesh stays bitwise-identical."""
+    cfg, Xp, y, params = setup
+    ec = async_engine.EngineConfig(method="cascaded", steps=15, batch_size=8)
+    single = Federation.build(cfg, VFL, ec).run(params, Xp, y)
+    ec_sh = async_engine.EngineConfig(method="cascaded", steps=15,
+                                      batch_size=8, mesh_shards=1)
+    fed = Federation.build(cfg, VFL, ec_sh)
+    assert fed.mesh is not None and fed.mesh.shape["data"] == 1
+    shard = fed.run(params, Xp, y)
+    assert np.array_equal(single.losses, shard.losses)
+
+
+def test_build_validation(setup):
+    cfg, *_ = setup
+    ec = async_engine.EngineConfig(method="cascaded")
+    with pytest.raises(ValueError, match="not both"):
+        Federation.build(cfg, VFL, ec, noise=CHANNEL,
+                         transport=Transport("cascaded", noise=CHANNEL))
+    with pytest.raises(ValueError, match="disagree"):
+        Federation.build(cfg, VFL, ec, transport=Transport("vafl"))
+    with pytest.raises(TypeError):
+        Federation.build("paper-mlp", VFL, ec)
+    with pytest.raises(ValueError, match="sync_step"):
+        Federation.build(cfg, VFL, ec).sync_step(sgd(0.1))
+    from repro.launch.mesh import make_client_mesh
+    with pytest.raises(ValueError, match="mesh_shards"):
+        Federation.build(cfg, VFL,
+                         async_engine.EngineConfig(method="cascaded",
+                                                   mesh_shards=1),
+                         mesh=make_client_mesh(1))
+
+
+def test_engine_rejects_noise_with_unrolled_oracle(setup):
+    """Both planes refuse noise + the unrolled oracle the same way."""
+    import dataclasses
+    cfg, Xp, y, params = setup
+    ec = async_engine.EngineConfig(method="cascaded", steps=2, batch_size=4)
+    fed = Federation.build(cfg, dataclasses.replace(
+        VFL, zoo_unrolled_oracle=True), ec, noise=CHANNEL)
+    with pytest.raises(ValueError, match="oracle"):
+        fed.run(params, Xp, y)
+
+
+# ------------------------------------------------------- Transport --------
+
+def test_transport_canonicalizes_method():
+    assert Transport("ours").method == "cascaded"
+    assert Transport("syn-zoo-vfl").method == "syn-zoo"
+    with pytest.raises(ValueError):
+        Transport("sgd-vfl")
+
+
+def test_transport_rejects_noise_on_wrong_wires():
+    with pytest.raises(ValueError, match="partial derivatives"):
+        Transport("vafl", noise=CHANNEL)
+    with pytest.raises(ValueError, match="sync"):
+        Transport("syn-zoo", noise=CHANNEL)
+    # async ZOO wires accept it
+    assert Transport("cascaded", noise=CHANNEL).noise is CHANNEL
+    assert Transport("zoo", noise=CHANNEL).method == "zoo-vfl"
+
+
+def test_transport_downlink_identity_without_channel():
+    losses = jnp.asarray([1.0, 2.0, 3.0])
+    out = Transport("cascaded").downlink(losses, jax.random.key(0))
+    assert out is losses
+
+
+def test_transport_owns_ledger_accounting():
+    t = Transport("cascaded")
+    led = t.account(batch=8, embed=16, zoo_queries=3, n_clients=2,
+                    n_rounds=5)
+    per = sum(m.nbytes for m in round_messages("cascaded", 8, 16, 3))
+    assert led.total_bytes == 10 * per
+    assert not led.transmits_gradients
+
+
+# ------------------------------------------------- DP loss channel --------
+
+def test_gaussian_channel_sigma_calibration():
+    ch = GaussianLossChannel(clip=2.0, epsilon=0.5, delta=1e-5)
+    expect = 2.0 * math.sqrt(2.0 * math.log(1.25 / 1e-5)) / 0.5
+    assert ch.sigma == pytest.approx(expect)
+    for bad in (dict(clip=0.0), dict(epsilon=-1.0), dict(delta=1.5)):
+        with pytest.raises(ValueError):
+            GaussianLossChannel(**bad)
+
+
+def test_gaussian_channel_clips_and_noises():
+    ch = GaussianLossChannel(clip=1.0, epsilon=10_000.0, delta=1e-5)
+    losses = jnp.asarray([5.0, -3.0, 0.5])
+    out = np.asarray(ch.apply(losses, jax.random.key(0)))
+    # at huge ε the noise is tiny: the clamp dominates
+    np.testing.assert_allclose(out, [1.0, 0.0, 0.5], atol=0.01)
+
+
+def test_accountant_composition():
+    ch = GaussianLossChannel(clip=1.0, epsilon=0.1, delta=1e-6)
+    assert ch.spent(0) == (0.0, 0.0)
+    e1, d1 = ch.spent(1)
+    assert (e1, d1) == (0.1, 1e-6)
+    e_small, _ = ch.spent(100)
+    e_big, d_big = ch.spent(10_000)
+    assert 0 < e_small < e_big < math.inf
+    # advanced composition beats basic for many small-ε releases
+    assert e_big < 10_000 * ch.epsilon
+    assert 0 < d_big < 1
+
+
+def test_dp_run_reports_finite_budget(setup):
+    """ISSUE acceptance: with the noise channel enabled the engine still
+    keeps gradients off the wire and reports a finite spent (ε, δ)."""
+    cfg, Xp, y, params = setup
+    ec = async_engine.EngineConfig(method="cascaded", steps=30, batch_size=8)
+    clean = Federation.build(cfg, VFL, ec).run(params, Xp, y)
+    noisy = Federation.build(cfg, VFL, ec, noise=CHANNEL).run(params, Xp, y)
+    assert np.isfinite(noisy.epsilon) and noisy.epsilon > 0
+    assert 0 < noisy.delta < 1
+    assert not noisy.transmits_gradients
+    assert noisy.wire_bytes == clean.wire_bytes    # noise adds no bytes
+    assert np.isfinite(noisy.losses).all()
+    # the noisy wire perturbs the client updates -> different trajectory
+    assert not np.array_equal(clean.losses, noisy.losses)
+
+
+def test_dp_sync_cascade_step_noises_client_only(setup):
+    """The cascade step factory's noise hook perturbs only what the
+    client receives: the server partition's FOO update stays exact."""
+    cfg, Xp, y, params = setup
+    vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=0.05, zoo_queries=2)
+    opt = sgd(0.05)
+    batch = {"x_parts": Xp[:, :16], "y": y[:16]}
+    outs = {}
+    for name, transport in (("clean", Transport("cascaded")),
+                            ("noisy", Transport("cascaded", noise=CHANNEL))):
+        step = cascade.make_step_for_method(
+            "cascaded", tabular.global_loss, tabular.CLIENT_KEYS, vfl, opt,
+            transport=transport)
+        outs[name] = jax.jit(step)(params, opt.init(params), batch,
+                                   jax.random.key(3))[0]
+    assert all(
+        jnp.array_equal(a, b) for a, b in
+        zip(jax.tree.leaves(outs["clean"]["server"]),
+            jax.tree.leaves(outs["noisy"]["server"])))
+    assert not all(
+        jnp.array_equal(a, b) for a, b in
+        zip(jax.tree.leaves(outs["clean"]["clients"]),
+            jax.tree.leaves(outs["noisy"]["clients"])))
+
+
+def test_step_factory_noise_validation():
+    opt = sgd(0.05)
+    with pytest.raises(NotImplementedError):
+        cascade.make_step_for_method(
+            "zoo-vfl", tabular.global_loss, tabular.CLIENT_KEYS, VFL, opt,
+            transport=Transport("zoo-vfl", noise=CHANNEL))
+    with pytest.raises(ValueError, match="transport method"):
+        cascade.make_step_for_method(
+            "zoo-vfl", tabular.global_loss, tabular.CLIENT_KEYS, VFL, opt,
+            transport=Transport("cascaded"))
+    import dataclasses
+    with pytest.raises(ValueError, match="fused lane"):
+        cascade.make_cascaded_step(
+            tabular.global_loss, tabular.CLIENT_KEYS,
+            dataclasses.replace(VFL, fused_dual=False), opt,
+            transport=Transport("cascaded", noise=CHANNEL))
+
+
+# ------------------------------------------------- CLI canonicalization ---
+
+def test_cli_accepts_every_alias_spelling():
+    """launch/train.py's argparse surface is the shared alias table; the
+    driver canonicalizes before anything downstream sees the name."""
+    parser = build_parser()
+    choices = next(a.choices for a in parser._actions
+                   if "--method" in a.option_strings)
+    assert set(choices) == set(METHOD_ALIASES)
+    for alias in METHOD_ALIASES:
+        assert parser.parse_args(["--method", alias]).method == alias

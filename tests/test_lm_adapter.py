@@ -1,0 +1,208 @@
+"""Property tests for ``adapters.from_model_config`` — the bridge that
+derives an async-engine ModelAdapter from any decoder ``ModelConfig``
+(clients own the embedding spans, the server owns the backbone + head)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import VFLConfig, get_config, reduced
+from repro.core import async_engine, zoo
+from repro.core.adapters import from_model_config, lm_engine_params
+from repro.data import lm_token_batches, vertical_partition
+from repro.federation import Federation, GaussianLossChannel
+from repro.models import common
+from repro.models.model_api import build_model
+
+SEQ = 16
+
+
+def tiny_cfg(**overrides):
+    return reduced(get_config("phi3-mini-3.8b"), d_model=64, n_heads=2,
+                   n_kv_heads=1, d_ff=128, vocab_size=256, **overrides)
+
+
+def token_data(cfg, n=64, seq=SEQ, seed=3):
+    toks = next(lm_token_batches(seed, cfg.vocab_size, n, seq))["tokens"]
+    return jnp.asarray(toks)
+
+
+# ------------------------------------------- global-loss equivalence ------
+
+@settings(max_examples=6, deadline=None)
+@given(n_clients=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**16))
+def test_global_loss_matches_model_loss_fn(n_clients, seed):
+    """With every client party holding the same embedding table, the
+    derived adapter's global (all-fresh) loss IS the global model's
+    ``loss_fn`` — the bridge changes the protocol, not the model."""
+    cfg = tiny_cfg()
+    model = build_model(cfg, max_seq=SEQ)
+    gp = common.materialize(model.param_specs, jax.random.key(seed))
+    adapter = from_model_config(cfg, n_clients=n_clients, seq_len=SEQ)
+    ep = lm_engine_params(gp, n_clients)
+
+    toks = token_data(cfg, n=8, seed=seed % 97)
+    x_parts = jnp.asarray(vertical_partition(np.asarray(toks), n_clients))
+    got = adapter.global_loss(ep, x_parts, toks)
+    want, _ = model.loss_fn(gp, {"tokens": toks, "labels": toks})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-6)
+
+
+def test_engine_param_layout():
+    cfg = tiny_cfg()
+    adapter = from_model_config(cfg, n_clients=4, seq_len=SEQ)
+    params = adapter.init_params(jax.random.key(0))
+    assert set(params) == {"clients", "server"}
+    table = params["clients"]["embed"]["table"]
+    assert table.shape == (4, cfg.padded_vocab, cfg.d_model)
+    assert "embed" not in params["server"]
+    assert "mtp" not in params["server"]
+    # replicated layout: every client row holds the same global table
+    gp = common.materialize(build_model(cfg, max_seq=SEQ).param_specs,
+                            jax.random.key(1))
+    ep = lm_engine_params(gp, 3)
+    rows = ep["clients"]["embed"]["table"]
+    assert all(jnp.array_equal(rows[i], gp["embed"]["table"])
+               for i in range(3))
+
+
+def test_from_model_config_rejects_unsupported():
+    with pytest.raises(ValueError, match="frontend"):
+        from_model_config(reduced(get_config("whisper-medium")),
+                          n_clients=2, seq_len=SEQ)
+    with pytest.raises(ValueError, match="frontend"):
+        from_model_config(reduced(get_config("internvl2-26b")),
+                          n_clients=2, seq_len=SEQ)
+    with pytest.raises(ValueError, match="split evenly"):
+        from_model_config(tiny_cfg(), n_clients=3, seq_len=SEQ)
+
+
+# ---------------------------------------------------- lanes fan-out -------
+
+def test_client_lanes_matches_perturb_then_forward():
+    """The fused lanes (one gather into the stacked direction tables)
+    equal perturb-the-table-then-embed, lane for lane."""
+    cfg = tiny_cfg()
+    adapter = from_model_config(cfg, n_clients=2, seq_len=SEQ)
+    params = adapter.init_params(jax.random.key(0))
+    client_0 = jax.tree.map(lambda a: a[0], params["clients"])
+    x_m = token_data(cfg, n=8)[:, : SEQ // 2]
+    q, mu = 3, 1e-3
+    u_stack, _ = zoo.sample_directions(jax.random.key(5), client_0, q)
+
+    lanes = adapter.client_lanes(client_0, u_stack, mu, x_m)
+    assert lanes.shape == (1 + q, 8, (SEQ // 2) * cfg.d_model)
+    np.testing.assert_array_equal(
+        np.asarray(lanes[0]), np.asarray(adapter.client_forward(client_0,
+                                                                x_m)))
+    for i in range(q):
+        u_i = jax.tree.map(lambda a: a[i], u_stack)
+        ref = adapter.client_forward(zoo.perturb(client_0, u_i, mu), x_m)
+        np.testing.assert_array_equal(np.asarray(lanes[1 + i]),
+                                      np.asarray(ref))
+
+
+def test_lanes_engine_matches_unrolled_oracle():
+    """Engine acceptance: the fused-lanes client fan-out tracks the
+    unrolled per-query ZOO oracle over a full async run."""
+    cfg = tiny_cfg()
+    M = 4
+    adapter = from_model_config(cfg, n_clients=M, seq_len=SEQ)
+    params = adapter.init_params(jax.random.key(0))
+    toks = token_data(cfg, n=64)
+    x_parts = jnp.asarray(vertical_partition(np.asarray(toks), M))
+    kw = dict(steps=6, batch_size=4)
+    vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=1e-4, zoo_queries=2)
+    r_lanes = async_engine.run(
+        async_engine.EngineConfig(method="cascaded", use_lanes=True, **kw),
+        vfl, params, x_parts, toks, adapter=adapter)
+    import dataclasses
+    r_oracle = async_engine.run(
+        async_engine.EngineConfig(method="cascaded", use_lanes=False, **kw),
+        dataclasses.replace(vfl, zoo_unrolled_oracle=True),
+        params, x_parts, toks, adapter=adapter)
+    np.testing.assert_allclose(r_lanes.losses, r_oracle.losses,
+                               rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------------------------------ active rows -------
+
+def test_row_mask_restricts_to_batch_tokens():
+    cfg = tiny_cfg()
+    adapter = from_model_config(cfg, n_clients=2, seq_len=SEQ)
+    params = adapter.init_params(jax.random.key(0))
+    client_0 = jax.tree.map(lambda a: a[0], params["clients"])
+    x_m = jnp.asarray([[3, 7, 3, 11]], jnp.int32)
+    mask = adapter.row_mask(client_0, x_m)["embed"]["table"]
+    assert mask.shape == (cfg.padded_vocab,)
+    assert set(np.flatnonzero(np.asarray(mask))) == {3, 7, 11}
+    # masked directions carry no mass off the active rows
+    u_stack, d_eff = zoo.sample_directions(
+        jax.random.key(1), client_0, 2, "sphere",
+        adapter.row_mask(client_0, x_m))
+    off_rows = np.delete(np.asarray(u_stack["embed"]["table"]),
+                         [3, 7, 11], axis=1)
+    assert np.all(off_rows == 0.0)
+    np.testing.assert_allclose(np.asarray(d_eff), 3 * cfg.d_model)
+
+
+# ------------------------------------------- async end-to-end (ISSUE) -----
+
+def test_federation_drives_async_lm_run():
+    """ISSUE acceptance: Federation.build drives an async (staleness > 0)
+    run of a reduced transformer-backbone config end-to-end — the loss
+    decreases, wire accounting is reported, and no gradients cross."""
+    cfg = tiny_cfg()
+    M = 4
+    fed = Federation.build(
+        cfg, VFLConfig(mu=1e-3, lr_server=0.05, lr_client=1e-4,
+                       active_rows_only=True),
+        async_engine.EngineConfig(method="cascaded", steps=80, batch_size=8,
+                                  use_lanes=True),
+        n_clients=M, seq_len=SEQ)
+    assert fed.adapter.row_mask is not None
+    params = fed.init_params(jax.random.key(0))
+    toks = token_data(cfg, n=64)
+    x_parts = jnp.asarray(vertical_partition(np.asarray(toks), M))
+    res = fed.run(params, x_parts, toks)
+    assert res.max_delay_seen > 0                      # real staleness
+    assert np.isfinite(res.losses).all()
+    assert res.losses[-15:].mean() < res.losses[:15].mean()
+    assert res.wire_bytes > 0
+    assert not res.transmits_gradients
+
+
+def test_session_gates_row_mask_on_vfl_flag():
+    """vfl.active_rows_only selects the active-row ZOO mask on BOTH
+    planes: the derived async adapter honours the same flag the sync
+    cascade's _maybe_row_mask gates on."""
+    cfg = tiny_cfg()
+    ec = async_engine.EngineConfig(method="cascaded")
+    on = Federation.build(cfg, VFLConfig(active_rows_only=True), ec,
+                          n_clients=2, seq_len=SEQ)
+    off = Federation.build(cfg, VFLConfig(active_rows_only=False), ec,
+                           n_clients=2, seq_len=SEQ)
+    assert on.adapter.row_mask is not None
+    assert off.adapter.row_mask is None
+
+
+def test_federation_async_lm_dp_budget():
+    """Same run with the noise channel: still gradient-free, finite
+    (ε, δ) reported on the EngineResult."""
+    cfg = tiny_cfg()
+    M = 2
+    fed = Federation.build(
+        cfg, VFLConfig(mu=1e-3, lr_server=0.05, lr_client=1e-4),
+        async_engine.EngineConfig(method="cascaded", steps=10, batch_size=4),
+        n_clients=M, seq_len=SEQ,
+        noise=GaussianLossChannel(clip=10.0, epsilon=0.5, delta=1e-5))
+    params = fed.init_params(jax.random.key(1))
+    toks = token_data(cfg, n=32)
+    x_parts = jnp.asarray(vertical_partition(np.asarray(toks), M))
+    res = fed.run(params, x_parts, toks)
+    assert np.isfinite(res.epsilon) and res.epsilon > 0
+    assert 0 < res.delta < 1
+    assert not res.transmits_gradients
+    assert np.isfinite(res.losses).all()
