@@ -1,6 +1,11 @@
-"""Serve a small model with batched requests across model families —
-KV-cache decode (granite MQA), SSM-state decode (rwkv6), hybrid decode
-(zamba2) and enc-dec decode (whisper).
+"""Serve small models with batched requests across model families —
+SPLIT inference through the Federation session's serve plane: the client
+parties embed their token spans, the server runs backbone + head with
+KV/SSM caches, and every step's wire traffic (embedding up, token ids
+down) lands in the session ledger. Covers KV-cache decode (granite MQA),
+SSM-state decode (rwkv6) and hybrid decode (zamba2); whisper is
+encoder-decoder — its modality frontend cannot cross the VFL wire, so it
+exercises the global back-compat path.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -10,10 +15,17 @@ from repro.launch.serve import serve
 
 
 def main():
-    for arch in ("granite-20b", "rwkv6-7b", "zamba2-2.7b", "whisper-medium"):
+    for arch in ("granite-20b", "rwkv6-7b", "zamba2-2.7b"):
         res = serve(arch, batch=4, prompt_len=12, gen_len=12,
-                    temperature=0.8)
+                    temperature=0.8, n_clients=2)
         print(json.dumps(res), flush=True)
+        assert res["mode"] == "federated"
+        assert res["wire_bytes"] > 0 and not res["wire_has_gradients"]
+    # enc-dec fallback: asked to split, served global with a reason
+    res = serve("whisper-medium", batch=4, prompt_len=12, gen_len=12,
+                temperature=0.8, n_clients=2)
+    print(json.dumps(res), flush=True)
+    assert res["mode"] == "global" and "fallback" in res
 
 
 if __name__ == "__main__":

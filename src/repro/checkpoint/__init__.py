@@ -1,3 +1,3 @@
-from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.checkpoint.io import load_checkpoint, load_tree, save_checkpoint
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = ["load_checkpoint", "load_tree", "save_checkpoint"]

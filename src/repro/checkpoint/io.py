@@ -14,6 +14,22 @@ import numpy as np
 
 _SEP = "::"
 
+# npz cannot round-trip numpy extension dtypes (bfloat16/float8 have void
+# descrs): such leaves are stored as a same-width uint view and viewed
+# back on load from the manifest's true dtype
+_UINT_FOR_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.kind == "V":
+        return arr.view(_UINT_FOR_SIZE[arr.dtype.itemsize])
+    return arr
+
+
+def _decode(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    dt = np.dtype(dtype_str)
+    return arr.view(dt) if (dt.kind == "V" and arr.dtype != dt) else arr
+
 
 def _flatten(tree) -> dict:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -36,7 +52,8 @@ def save_checkpoint(path: str, params, *, step: int = 0,
                     metadata: Optional[dict] = None) -> None:
     os.makedirs(path, exist_ok=True)
     flat = _flatten(params)
-    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{k: _encode(v) for k, v in flat.items()})
     manifest = {
         "step": step,
         "keys": sorted(flat),
@@ -46,6 +63,33 @@ def save_checkpoint(path: str, params, *, step: int = 0,
     }
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=2)
+
+
+def load_tree(path: str):
+    """Self-describing restore: rebuild the nested-dict pytree purely from
+    the manifest's flat keys (no ``like`` structure needed — what the
+    party-scoped ``Federation.restore`` uses, where the reader may not be
+    able to construct the writer's structure up front).
+
+    Only string-keyed dict nesting round-trips this way; trees with
+    list/tuple internal nodes must go through :func:`load_checkpoint`.
+    Returns (tree, step, metadata)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    tree: dict = {}
+    for key in manifest["keys"]:
+        parts = key.split(_SEP) if key else []
+        if any(p.startswith("[") for p in parts):
+            raise ValueError(
+                f"load_tree only rebuilds dict-nested trees; key {key!r} "
+                "has a sequence index — restore via load_checkpoint(like)")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jax.numpy.asarray(
+            _decode(data[key], manifest["dtypes"][key]))
+    return tree, manifest["step"], manifest.get("metadata", {})
 
 
 def load_checkpoint(path: str, like, *, shardings: Optional[Any] = None):
@@ -59,7 +103,7 @@ def load_checkpoint(path: str, like, *, shardings: Optional[Any] = None):
     leaves = []
     for path_k, leaf in flat_like[0]:
         key = _SEP.join(_path_str(p) for p in path_k)
-        arr = data[key]
+        arr = _decode(data[key], manifest["dtypes"][key])
         leaves.append(arr)
     params = jax.tree_util.tree_unflatten(flat_like[1], leaves)
     if shardings is not None:

@@ -52,6 +52,16 @@ class ModelAdapter:
       (M, n, e) embedding table; the engine's device-sharded path resolves
       its partitioning from these via ``repro.sharding.rules`` (the
       leading "clients" axis shards rows across the mesh "data" axis).
+
+    Serve plane (optional — set by :func:`from_model_config`; tabular
+    adapters have no decode concept and leave them ``None``):
+
+    * ``client_embed(client_m, tokens)``  -> (bs, 1, d): the owning party
+      embeds the current token — its only serve-time uplink.
+    * ``server_decode(server, x, caches, cur_pos)`` -> (logits, caches):
+      backbone + head over the uploaded embedding; KV/SSM caches and
+      logits never leave the server.
+    * ``cache_specs(batch, max_seq)``     -> decode-state spec tree.
     """
     name: str
     client_forward: Callable
@@ -60,6 +70,9 @@ class ModelAdapter:
     client_lanes: Optional[Callable] = None
     table_logical: Tuple[Optional[str], ...] = ("clients", None, None)
     row_mask: Optional[Callable] = None
+    client_embed: Optional[Callable] = None
+    server_decode: Optional[Callable] = None
+    cache_specs: Optional[Callable] = None
 
     def init_params(self, key):
         return common.materialize(self.param_specs(), key)
@@ -84,8 +97,9 @@ def tabular_adapter(cfg: Optional[PaperMLPConfig] = None,
 
     ``use_pallas_lanes=True`` computes the clean + q perturbed client
     forwards through the fused ``zoo_dual_matmul_stacked`` Pallas kernel
-    (one read of x/W per output tile, HBM traffic constant in q); the
-    default composes the same lanes with plain XLA ops.
+    with the bias+ReLU epilogue fused into the same pass (one read of
+    x/W per output tile, HBM traffic constant in q, activated outputs
+    written once); the default composes the same lanes with plain XLA ops.
     """
     cfg = cfg or PaperMLPConfig()
 
@@ -95,13 +109,15 @@ def tabular_adapter(cfg: Optional[PaperMLPConfig] = None,
     def client_lanes(client_m, u_stack, mu, x_m):
         w, b = client_m["w"], client_m["b"]
         if use_pallas_lanes:
-            y, y_hat = zoo_dual_matmul_stacked(x_m, w, u_stack["w"], mu)
+            clean, pert = zoo_dual_matmul_stacked(x_m, w, u_stack["w"], mu,
+                                                  b=b, ub=u_stack["b"])
         else:
             y = x_m @ w
             y_hat = y[None] + mu * jnp.einsum("bf,qfe->qbe", x_m,
                                               u_stack["w"])
-        clean = jax.nn.relu(y + b)
-        pert = jax.nn.relu(y_hat + (b[None] + mu * u_stack["b"])[:, None, :])
+            clean = jax.nn.relu(y + b)
+            pert = jax.nn.relu(
+                y_hat + (b[None] + mu * u_stack["b"])[:, None, :])
         return jnp.concatenate([clean[None], pert], axis=0)
 
     return ModelAdapter(
@@ -283,6 +299,36 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
         return {"embed": {"table": zoo.embedding_row_mask(
             x_m, client_m["embed"]["table"].shape[0])}}
 
+    # ---- serve plane: split inference with the training party split ----
+    # The owning client embeds the current token (its span of positions);
+    # the server runs pos-embed + backbone + head against its caches —
+    # the exact post-embedding half of ``transformer.forward``'s decode
+    # path, so split decode is bitwise-equal to global decode.
+
+    def client_embed(client_m, tokens):
+        """tokens (bs, 1) int32 -> (bs, 1, d) — the serve-time uplink."""
+        return embed_lookup(client_m["embed"], tokens, iota=cfg.iota_embed)
+
+    def server_decode(server, x, caches, cur_pos):
+        positions = jnp.asarray(cur_pos)[None]
+        if "pos_embed" in server:
+            pos_table = server["pos_embed"]
+            pe = jnp.take(pos_table,
+                          jnp.clip(positions, 0, pos_table.shape[0] - 1),
+                          axis=0)
+            x = x + pe.astype(x.dtype)
+        x = shard_constraint(x, ("batch", None, "embed_act"))
+        h, new_caches, _ = transformer.backbone_apply(
+            cfg, server, x, positions=positions, caches=caches,
+            cur_pos=cur_pos)
+        h = apply_norm(cfg, server["final_norm"], h)
+        logits = unembed(server["lm_head"], h)
+        logits = shard_constraint(logits, ("batch", None, "vocab_act"))
+        return logits, new_caches
+
+    def cache_specs(batch, max_seq):
+        return model_api.build_cache_specs(cfg, batch, max_seq)
+
     return ModelAdapter(
         name=f"lm-{cfg.arch_id}-m{n_clients}-s{seq_len}",
         client_forward=client_forward,
@@ -291,6 +337,9 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
         client_lanes=client_lanes,
         table_logical=("clients", None, None),
         row_mask=row_mask if active_rows else None,
+        client_embed=client_embed,
+        server_decode=server_decode,
+        cache_specs=cache_specs,
     )
 
 

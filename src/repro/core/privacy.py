@@ -49,6 +49,22 @@ class Message:
         return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
 
 
+def serve_messages(batch: int, embed: int,
+                   with_token: bool = True) -> List[Message]:
+    """Wire contents of ONE split-inference step.
+
+    The owning client party embeds the current token and uploads the
+    (batch, d_model) embedding; on GENERATION steps (``with_token``) the
+    server additionally returns the sampled token ids — during prefill
+    the clients already hold the prompt, so nothing crosses back down.
+    Logits, caches and every internal activation stay server-side, so the
+    serve wire is as structurally safe as the training wire (§V)."""
+    up = [Message("client", "embedding", (batch, embed))]
+    if with_token:
+        up.append(Message("server", "token", (batch,), "int32"))
+    return up
+
+
 def round_messages(method: str, batch: int, embed: int,
                    zoo_queries: int = 1) -> List[Message]:
     """Wire contents of ONE activated client's round.
@@ -107,6 +123,30 @@ class Ledger:
             out[m.kind] = out.get(m.kind, 0) + m.nbytes
         return out
 
+    # ------------------------------------------------- serialization ------
+    # Checkpoint/resume needs the ledger totals to survive a process
+    # restart. Messages are frozen value objects, so the whole history
+    # aggregates losslessly into (message, count) pairs — a resumed run
+    # extends the restored ledger and the totals continue exactly.
+
+    def to_counts(self) -> List[list]:
+        order: List[Message] = []
+        counts: Dict[Message, int] = {}
+        for m in self.messages:
+            if m not in counts:
+                order.append(m)
+            counts[m] = counts.get(m, 0) + 1
+        return [[m.sender, m.kind, list(m.shape), m.dtype, counts[m]]
+                for m in order]
+
+    @classmethod
+    def from_counts(cls, counts: List[list]) -> "Ledger":
+        led = cls()
+        for sender, kind, shape, dtype, n in counts:
+            led.messages.extend([Message(sender, kind, tuple(shape),
+                                         dtype)] * int(n))
+        return led
+
 
 # ==================================================== DP loss channel ======
 
@@ -122,11 +162,18 @@ class GaussianLossChannel:
 
         σ = clip · √(2 ln(1.25/δ)) / ε          (Dwork & Roth, Thm A.1).
 
-    :meth:`spent` composes the per-release budget over a run's k releases
-    with a simple moments-style accountant: the better of basic
-    composition (kε, kδ) and advanced composition
+    :meth:`spent` composes the per-release budget over a run's k releases.
+    ``accountant="basic"`` (default) takes the better of basic composition
+    (kε, kδ) and advanced composition
     (ε√(2k ln(1/δ)) + kε(eᵉ−1),  (k+1)δ) — exact enough to report an
     honest finite budget without an external DP library.
+    ``accountant="rdp"`` tracks the Gaussian mechanism in Rényi-DP
+    instead: one release with sensitivity Δ=clip and noise σ satisfies
+    (α, αΔ²/(2σ²))-RDP for every order α; RDP composes by plain addition,
+    and the composed guarantee converts back with
+    ε(δ) = min_α [ k·αΔ²/(2σ²) + ln(1/δ)/(α−1) ] at total δ = ``delta`` —
+    the moments-accountant bound, asymptotically √k vs advanced
+    composition's √(k·ln) and strictly tighter δ (δ, not (k+1)δ).
 
     The channel is deliberately a frozen value object: the async engine
     hashes it (inside ``federation.Transport``) as part of its compiled
@@ -136,6 +183,12 @@ class GaussianLossChannel:
     clip: float = 10.0
     epsilon: float = 1.0          # per-release ε target
     delta: float = 1e-5           # per-release δ target
+    accountant: str = "basic"     # basic (min of basic/advanced) | rdp
+
+    # RDP orders swept by the moments accountant (standard grid: dense at
+    # small α where few-release budgets convert best, log-spaced beyond)
+    RDP_ORDERS = (1.25, 1.5, 1.75, 2.0, 2.5, 3.0, 4.0, 6.0, 8.0, 16.0,
+                  32.0, 64.0, 128.0, 256.0, 512.0)
 
     def __post_init__(self):
         if self.clip <= 0 or self.epsilon <= 0 or not 0 < self.delta < 1:
@@ -143,6 +196,10 @@ class GaussianLossChannel:
                 f"need clip > 0, epsilon > 0, 0 < delta < 1; got "
                 f"clip={self.clip}, epsilon={self.epsilon}, "
                 f"delta={self.delta}")
+        if self.accountant not in ("basic", "rdp"):
+            raise ValueError(
+                f"accountant must be 'basic' or 'rdp', "
+                f"got {self.accountant!r}")
 
     @property
     def sigma(self) -> float:
@@ -161,6 +218,8 @@ class GaussianLossChannel:
         k = int(n_releases)
         if k <= 0:
             return 0.0, 0.0
+        if self.accountant == "rdp":
+            return self._spent_rdp(k)
         basic = (k * self.epsilon, k * self.delta)
         advanced = (
             self.epsilon * math.sqrt(2.0 * k * math.log(1.0 / self.delta))
@@ -168,3 +227,13 @@ class GaussianLossChannel:
             (k + 1) * self.delta,
         )
         return min(basic, advanced, key=lambda ed: ed[0])
+
+    def _spent_rdp(self, k: int) -> Tuple[float, float]:
+        """Moments accountant: compose k Gaussian releases in RDP, convert
+        back at the fixed total δ = ``self.delta``."""
+        # per-release RDP coefficient: ε_RDP(α) = α · Δ²/(2σ²)
+        rho = (self.clip / self.sigma) ** 2 / 2.0
+        log_inv_delta = math.log(1.0 / self.delta)
+        eps = min(k * a * rho + log_inv_delta / (a - 1.0)
+                  for a in self.RDP_ORDERS)
+        return eps, self.delta

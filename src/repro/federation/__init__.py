@@ -1,13 +1,19 @@
-"""One federation API: sessions over models, transports over wires.
+"""One federation API: party-scoped sessions over models, transports
+over wires.
 
-Every entry point — ``launch/train.py``, the examples, the benchmarks,
-and the back-compat ``async_engine.run`` shim — constructs training the
-same way now:
+Every entry point — ``launch/train.py``, ``launch/serve.py``,
+``launch/dryrun.py``, the examples, the benchmarks, and the back-compat
+``async_engine.run`` shim — drives the whole lifecycle through the same
+session object now:
 
     from repro.federation import Federation, Transport
     fed = Federation.build(model_cfg, vfl_cfg, engine_cfg)
     result = fed.run(params, x_parts, y)        # async protocol (staleness)
     step   = fed.sync_step(optimizer)           # jitted cascade step
+    fed.parties                                 # ServerParty/ClientParty handles
+    fed.save(path, params, step=k, ...)         # one checkpoint dir per party
+    fed, params, state = Federation.restore(path)   # mid-training resume
+    res = fed.decode(params, prompts, gen_len=16)   # split inference
 
 ``model_cfg`` is ANY of: a ready ``ModelAdapter``, the paper's
 ``PaperMLPConfig``, or a registered LM-scale ``ModelConfig`` (the
@@ -29,13 +35,19 @@ old                                              new
 ``make_step_for_method(m, model.loss_fn, ...)``  ``Federation.build(model_cfg, vfl, EngineConfig(method=m), seq_len=S).sync_step(opt)``
 ``Ledger(); ledger.log_round(m, ...)``           ``fed.transport.account(batch=..., embed=..., ...)``
 (no DP story)                                    ``Federation.build(..., noise=GaussianLossChannel(clip, ε, δ))``
+``save_checkpoint(path, params)``                ``fed.save(path, params, step=..., opt_state=..., ledger=..., dp_releases=...)``
+``load_checkpoint(path, like)``                  ``Federation.restore(path)`` (rebuilds session + params + state)
+``launch/serve.py`` global decode                ``fed.decode(params, prompts, gen_len=...)`` (split, wire in ledger)
 ===============================================  =============================================================
 
 The old spellings keep working: ``async_engine.run`` is a thin wrapper
 over a session, bitwise-identical at noise=0.
 """
 from repro.core.privacy import GaussianLossChannel
-from repro.federation.session import Federation
+from repro.federation.parties import ClientParty, Parties, ServerParty
+from repro.federation.serving import ServeResult
+from repro.federation.session import Federation, SessionState
 from repro.federation.transport import Transport
 
-__all__ = ["Federation", "GaussianLossChannel", "Transport"]
+__all__ = ["ClientParty", "Federation", "GaussianLossChannel", "Parties",
+           "ServeResult", "ServerParty", "SessionState", "Transport"]

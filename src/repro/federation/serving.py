@@ -1,0 +1,131 @@
+"""The serve plane: split inference with the training party split.
+
+Training never merges the parties — and neither does serving. Per decoded
+position the OWNING client party (position ``t`` belongs to client
+``t // span``, the same span split the training adapter uses) embeds the
+current token on its own parameters and uploads one ``(batch, d_model)``
+embedding; the server holds the backbone, head and every KV/SSM cache,
+and returns only sampled token ids. Logits, caches and activations never
+cross the wire, and every step's uplink/downlink lands in the session's
+:class:`repro.core.privacy.Ledger` through the ``Transport`` — serve-time
+traffic is accounted exactly like training rounds.
+
+The loop below mirrors ``launch/serve.py``'s prefill-as-decode schedule
+op for op (same sampling keys, same clamp), so split decode is
+bitwise-identical to global decode on replicated client tables — the
+serve-plane analogue of ``global_loss == model.loss_fn`` on the training
+plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapters import ModelAdapter
+from repro.core.privacy import Ledger
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One ``Federation.decode`` call: generated tokens + wire totals."""
+    tokens: np.ndarray              # (B, gen_len) sampled token ids
+    logits: jnp.ndarray             # final-step logits (B, 1, vocab) —
+                                    # server-side state, exposed for tests
+    ledger: Ledger
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.ledger.total_bytes
+
+    @property
+    def transmits_gradients(self) -> bool:
+        return self.ledger.transmits_gradients
+
+
+@functools.lru_cache(maxsize=32)
+def make_serve_step(adapter: ModelAdapter, n_clients: int, seq_len: int):
+    """Jitted one-token split-inference step.
+
+    ``step(params, tok, caches, t)``: the client owning position ``t``
+    embeds ``tok`` (one dynamic gather into the stacked client params —
+    the other parties' tables are never read), the server decodes against
+    its caches. Compiled once; ``t`` is a traced scalar. lru-cached on
+    (adapter, split) like the engine's ``_make_runner``, so a serving
+    loop calling ``fed.decode`` per request reuses the compiled step
+    instead of retracing the backbone every call (adapters are frozen
+    value objects and the adapter factories are themselves cached, so
+    equal configs hit)."""
+    if adapter.client_embed is None or adapter.server_decode is None:
+        raise ValueError(
+            f"adapter {adapter.name!r} has no serve plane (client_embed/"
+            "server_decode hooks); build the session from a ModelConfig "
+            "to serve split inference")
+    span = seq_len // n_clients
+
+    def step(params, tok, caches, t):
+        m = t // span
+        client_m = jax.tree.map(lambda a: a[m], params["clients"])
+        e = adapter.client_embed(client_m, tok)
+        logits, caches = adapter.server_decode(params["server"], e, caches,
+                                               t)
+        return logits, caches
+
+    return jax.jit(step, donate_argnums=(2,))
+
+
+def run_decode(adapter: ModelAdapter, transport, *, n_clients: int,
+               seq_len: int, embed_dim: int, vocab_size: int, params,
+               prompts, gen_len: int, temperature: float = 0.0,
+               key=None, ledger: Optional[Ledger] = None) -> ServeResult:
+    """Prefill + decode through the split serve step (the
+    ``Federation.decode`` engine)."""
+    B, prompt_len = prompts.shape
+    max_seq = prompt_len + gen_len
+    if max_seq > seq_len:
+        raise ValueError(
+            f"prompt_len + gen_len = {max_seq} exceeds the session "
+            f"seq_len {seq_len} (the party span split is sized to it)")
+    if key is None:
+        key = jax.random.key(0)
+    step = make_serve_step(adapter, n_clients, seq_len)
+    caches = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        adapter.cache_specs(B, max_seq),
+        is_leaf=lambda x: hasattr(x, "logical"))
+
+    t0 = time.time()
+    logits = None
+    for t in range(prompt_len):
+        logits, caches = step(params, prompts[:, t:t + 1], caches, t)
+    prefill_s = time.time() - t0
+
+    out_tokens = []
+    t0 = time.time()
+    for t in range(prompt_len, max_seq):
+        lg = logits[:, -1].astype(jnp.float32)
+        if temperature > 0:
+            nxt = jax.random.categorical(
+                jax.random.fold_in(key, 100 + t), lg / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        nxt = jnp.minimum(nxt, vocab_size - 1).astype(jnp.int32)
+        out_tokens.append(np.asarray(nxt))
+        logits, caches = step(params, nxt[:, None], caches, t)
+    decode_s = time.time() - t0
+
+    # every decode call uploads one embedding; only the gen_len sampled
+    # tokens cross back down (the clients already hold the prompt)
+    ledger = transport.account_serve(batch=B, embed=embed_dim,
+                                     n_steps=max_seq, n_gen=gen_len,
+                                     ledger=ledger)
+    return ServeResult(tokens=np.stack(out_tokens, axis=1), logits=logits,
+                       ledger=ledger, prefill_s=prefill_s,
+                       decode_s=decode_s)

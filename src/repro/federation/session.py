@@ -1,4 +1,4 @@
-"""The ``Federation`` session: one constructor for every training plane.
+"""The ``Federation`` session: one party-scoped lifecycle API.
 
 ``Federation.build(model_cfg, vfl_cfg, engine_cfg)`` resolves the three
 orthogonal choices every entry point used to wire by hand —
@@ -11,30 +11,72 @@ orthogonal choices every entry point used to wire by hand —
 * the EXECUTION substrate: the device-sharded client mesh, picked from
   ``engine_cfg.mesh_shards`` instead of a loose ``mesh=`` kwarg —
 
-and both protocol drivers run off the same session object:
-:meth:`Federation.run` for the asynchronous engine (staleness semantics,
-``lax.scan``), :meth:`Federation.sync_step` for the jitted cascade step
-factories that ``launch/train.py`` drives over real batches.
+and the whole lifecycle runs off the same session object:
+
+* TRAIN — :meth:`run` (asynchronous engine: staleness semantics, one
+  jitted ``lax.scan``) and :meth:`sync_step` (jitted cascade/baseline
+  step factories the ``launch/train.py`` driver pumps batches through);
+* CHECKPOINT/RESUME — :meth:`save` writes one directory per PARTY
+  (``fed.parties``: the server's directory contains zero client leaves
+  and vice versa) plus the session state (step, optimizer state, wire
+  ledger totals, spent DP budget); :meth:`restore` rebuilds the session
+  and state so a resumed run continues allclose to an uninterrupted one
+  with ledger and (ε, δ) totals exactly continued;
+* SERVE — :meth:`serve_step` / :meth:`decode` run split inference with
+  the SAME party split as training (clients embed their token spans,
+  the server owns backbone + head + caches), routed through the
+  ``Transport`` so serve-time wire traffic lands in the ledger.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+import json
+import math
+import os
+from typing import Any, Optional, Tuple, Union
 
+import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.checkpoint.io import load_tree, save_checkpoint
 from repro.configs.base import ModelConfig, VFLConfig
 from repro.configs.paper_mlp import PaperMLPConfig
 from repro.core import async_engine, cascade
 from repro.core.adapters import (ModelAdapter, from_model_config,
                                  lm_engine_params, tabular_adapter)
 from repro.core.methods import canonical_method
-from repro.core.privacy import GaussianLossChannel
+from repro.core.partition import merge_params, split_params
+from repro.core.privacy import GaussianLossChannel, Ledger
+from repro.federation import serving
+from repro.federation.parties import (ClientParty, Parties, ServerParty,
+                                      is_engine_layout)
 from repro.federation.transport import Transport
 from repro.launch.mesh import make_client_mesh
 from repro.models import model_api
 
 ModelLike = Union[ModelAdapter, ModelConfig, PaperMLPConfig]
+
+SESSION_MANIFEST = "session.json"
+CHECKPOINT_VERSION = 1
+
+
+@dataclasses.dataclass
+class SessionState:
+    """The non-parameter state a checkpoint carries: everything a resumed
+    run needs to continue EXACTLY (not just approximately) — the step
+    clock, the optimizer/schedule state, the Transport ledger totals, and
+    the DP accountant's release count."""
+    step: int = 0
+    opt_state: Optional[Any] = None
+    ledger: Ledger = dataclasses.field(default_factory=Ledger)
+    dp_releases: int = 0
+    # the free-form metadata the saver passed to ``fed.save`` (driver
+    # knobs like batch/seed/schedule live here, not in the session)
+    metadata: dict = dataclasses.field(default_factory=dict)
+
+    def dp_spent(self, transport: Transport) -> Tuple[float, float]:
+        return transport.privacy_spent(self.dp_releases)
 
 
 @dataclasses.dataclass
@@ -59,7 +101,8 @@ class Federation:
               noise: Optional[GaussianLossChannel] = None,
               transport: Optional[Transport] = None,
               mesh: Optional[Mesh] = None,
-              n_clients: int = 2, seq_len: int = 32) -> "Federation":
+              n_clients: int = 2, seq_len: int = 32,
+              model: Optional[model_api.Model] = None) -> "Federation":
         """One constructor for every entry point.
 
         ``model_cfg`` may be a ready :class:`ModelAdapter`, the paper's
@@ -69,7 +112,10 @@ class Federation:
         split). ``noise`` plugs a DP channel into the transport's loss
         downlink. ``mesh`` is normally derived from
         ``engine_cfg.mesh_shards``; passing an explicit ``Mesh`` is the
-        back-compat escape hatch ``async_engine.run`` uses.
+        back-compat escape hatch ``async_engine.run`` uses. ``model``
+        injects a pre-built :class:`model_api.Model` for a ModelConfig
+        session (the dry-run's hook for window/remat/decode variants the
+        default ``build_model`` call would not select).
         """
         vfl = vfl_cfg if vfl_cfg is not None else VFLConfig()
         engine = (engine_cfg if engine_cfg is not None
@@ -102,9 +148,11 @@ class Federation:
             raise TypeError(
                 f"model_cfg must be a ModelAdapter, PaperMLPConfig or "
                 f"ModelConfig, got {type(model_cfg).__name__}")
+        if model is not None and cfg is None:
+            raise ValueError("model= injection needs a ModelConfig session")
         return cls(vfl=vfl, engine=engine, transport=transport, mesh=mesh,
                    model_cfg=cfg, n_clients=n_clients,
-                   seq_len=seq_len, _adapter=adapter)
+                   seq_len=seq_len, _adapter=adapter, _model=model)
 
     # ------------------------------------------------------- model plane --
     @property
@@ -169,3 +217,245 @@ class Federation:
             self.transport.method, self.model.loss_fn,
             self.model.client_keys, self.vfl, optimizer, vocab=vocab,
             transport=self.transport)
+
+    # ------------------------------------------------------ party plane ---
+    @property
+    def client_keys(self) -> Tuple[str, ...]:
+        """Top-level GLOBAL-layout keys forming the client partition."""
+        if self.model_cfg is not None:
+            return self.model.client_keys
+        return ("clients",)
+
+    @property
+    def parties(self) -> Parties:
+        """Typed party handles — the one way any plane addresses state.
+
+        ``parties.server`` owns the backbone/head partition,
+        ``parties.clients[m]`` owns client m's slice; both resolve against
+        either param layout (engine ``{"clients", "server"}`` or the
+        global ``build_model`` tree)."""
+        keys = self.client_keys
+        return Parties(
+            server=ServerParty(client_keys=keys),
+            clients=tuple(ClientParty(index=m, client_keys=keys)
+                          for m in range(self.n_clients)))
+
+    # ------------------------------------------------------ serve plane ---
+    def serve_step(self):
+        """Jitted one-token split-inference step (see
+        :func:`repro.federation.serving.make_serve_step`): the client
+        owning the current position embeds the token, the server decodes
+        against its caches. Requires a ModelConfig-built session."""
+        return serving.make_serve_step(self.adapter, self.n_clients,
+                                       self.seq_len)
+
+    def decode(self, params, prompts, *, gen_len: int,
+               temperature: float = 0.0, seed: int = 0, key=None,
+               ledger: Optional[Ledger] = None) -> serving.ServeResult:
+        """Split inference with the training party split.
+
+        ``params`` may be the engine layout or a global ``build_model``
+        tree (replicated into the engine layout via
+        :meth:`params_from_global`). ``prompts``: (B, prompt_len) int32;
+        ``prompt_len + gen_len`` must fit the session ``seq_len`` (the
+        span split is sized to it). Serve-time wire traffic is logged
+        through the Transport — pass ``ledger`` to extend a training
+        run's totals instead of starting a fresh one."""
+        if self.model_cfg is None:
+            raise ValueError(
+                "decode needs a ModelConfig-built session (tabular/adapter "
+                "sessions have no serve plane)")
+        if not is_engine_layout(params):
+            params = self.params_from_global(params)
+        if key is None:
+            key = jax.random.key(seed)
+        return serving.run_decode(
+            self.adapter, self.transport, n_clients=self.n_clients,
+            seq_len=self.seq_len, embed_dim=self.model_cfg.d_model,
+            vocab_size=self.model_cfg.vocab_size, params=params,
+            prompts=prompts, gen_len=gen_len, temperature=temperature,
+            key=key, ledger=ledger)
+
+    # ------------------------------------------------- checkpoint plane ---
+    def save(self, path: str, params, *, step: int = 0,
+             opt_state: Optional[Any] = None,
+             ledger: Optional[Ledger] = None, dp_releases: int = 0,
+             metadata: Optional[dict] = None) -> str:
+        """Party-scoped checkpoint: one directory per party + session state.
+
+        Layout::
+
+            path/
+              session.json     step, configs, ledger totals, DP releases
+              server/          server party's leaves ONLY
+              client_00/ ...   per-client slices   (engine layout), or
+              clients/         the client partition (global layout)
+              opt_server/, opt_clients/   optimizer state, split on the
+                                          same party boundary (optional)
+
+        The isolation is structural (:mod:`repro.federation.parties`):
+        the server handle cannot address a client leaf, so its directory
+        provably contains none — and vice versa. Returns ``path`` (the
+        token ``Federation.restore`` consumes)."""
+        os.makedirs(path, exist_ok=True)
+        parties = self.parties
+        engine_layout = is_engine_layout(params)
+        if engine_layout:
+            rows = jax.tree.leaves(params["clients"])[0].shape[0]
+            if rows != len(parties.clients):
+                raise ValueError(
+                    f"params stack {rows} client parties but the session "
+                    f"was built with n_clients={len(parties.clients)} — a "
+                    "per-party save would silently drop rows; pass "
+                    f"n_clients={rows} to Federation.build")
+            save_checkpoint(os.path.join(path, parties.server.name),
+                            parties.server.owned(params), step=step)
+            for party in parties.clients:
+                save_checkpoint(os.path.join(path, party.name),
+                                party.owned(params), step=step)
+        else:
+            save_checkpoint(os.path.join(path, "server"),
+                            parties.server.owned(params), step=step)
+            save_checkpoint(os.path.join(path, "clients"),
+                            parties.clients[0].owned(params), step=step)
+        if opt_state is not None:
+            opt_c, opt_s = self._split_opt_state(opt_state, engine_layout)
+            save_checkpoint(os.path.join(path, "opt_server"), opt_s,
+                            step=step)
+            save_checkpoint(os.path.join(path, "opt_clients"), opt_c,
+                            step=step)
+
+        ledger = ledger if ledger is not None else Ledger()
+        eps, delta = self.transport.privacy_spent(dp_releases)
+        manifest = {
+            "version": CHECKPOINT_VERSION,
+            "step": int(step),
+            "layout": "engine" if engine_layout else "global",
+            "has_opt_state": opt_state is not None,
+            "model": self._model_manifest(),
+            "vfl": dataclasses.asdict(self.vfl),
+            "engine": dataclasses.asdict(self.engine),
+            "noise": (None if self.transport.noise is None
+                      else dataclasses.asdict(self.transport.noise)),
+            "n_clients": self.n_clients,
+            "seq_len": self.seq_len,
+            "ledger_counts": ledger.to_counts(),
+            "dp_releases": int(dp_releases),
+            "dp_spent": [eps if math.isfinite(eps) else None, delta],
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(path, SESSION_MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=2)
+        return path
+
+    @classmethod
+    def restore(cls, path: str, model_cfg: Optional[ModelLike] = None,
+                ) -> Tuple["Federation", Any, SessionState]:
+        """Rebuild (session, params, state) from a :meth:`save` directory.
+
+        The session's configs (model, vfl, engine, DP channel) come from
+        ``session.json``; only adapter-built sessions — whose model plane
+        is an arbitrary callable bundle — need the caller to pass the
+        ``model_cfg`` (the adapter) back in. ``state.step``/``opt_state``/
+        ``ledger``/``dp_releases`` continue a training run exactly:
+        re-drive the same batches from ``state.step`` and the trajectory
+        is allclose to one that never stopped."""
+        with open(os.path.join(path, SESSION_MANIFEST)) as f:
+            manifest = json.load(f)
+        if manifest["version"] != CHECKPOINT_VERSION:
+            raise ValueError(
+                f"checkpoint version {manifest['version']} != "
+                f"{CHECKPOINT_VERSION}")
+
+        model = cls._model_from_manifest(manifest["model"], model_cfg)
+        vfl_d = dict(manifest["vfl"])
+        if vfl_d.get("activation_probs") is not None:
+            vfl_d["activation_probs"] = tuple(vfl_d["activation_probs"])
+        noise_d = manifest["noise"]
+        fed = cls.build(
+            model, VFLConfig(**vfl_d),
+            async_engine.EngineConfig(**manifest["engine"]),
+            noise=None if noise_d is None else GaussianLossChannel(**noise_d),
+            n_clients=manifest["n_clients"], seq_len=manifest["seq_len"])
+
+        server_tree, _, _ = load_tree(os.path.join(path, "server"))
+        if manifest["layout"] == "engine":
+            client_trees = [
+                load_tree(os.path.join(path, party.name))[0]
+                for party in fed.parties.clients]
+            params = fed.parties.assemble(server_tree, client_trees)
+        else:
+            client_tree, _, _ = load_tree(os.path.join(path, "clients"))
+            params = fed.parties.merge_global(server_tree, client_tree)
+
+        opt_state = None
+        if manifest["has_opt_state"]:
+            opt_s, _, _ = load_tree(os.path.join(path, "opt_server"))
+            opt_c, _, _ = load_tree(os.path.join(path, "opt_clients"))
+            opt_state = fed._merge_opt_state(
+                opt_c, opt_s, manifest["layout"] == "engine")
+
+        state = SessionState(
+            step=manifest["step"], opt_state=opt_state,
+            ledger=Ledger.from_counts(manifest["ledger_counts"]),
+            dp_releases=manifest["dp_releases"],
+            metadata=manifest.get("metadata", {}))
+        return fed, params, state
+
+    # ----------------------------------------------- checkpoint helpers ---
+    def _model_manifest(self) -> dict:
+        if self.model_cfg is not None:
+            return {"kind": "model_config",
+                    "data": dataclasses.asdict(self.model_cfg)}
+        if (self._adapter is not None
+                and self._adapter.name.startswith("tabular")):
+            # a tabular adapter is fully determined by its PaperMLPConfig;
+            # reconstruct it from the stacked client/server spec shapes
+            spec = self._adapter.param_specs()
+            M, f, e = spec["clients"]["w"].shape
+            se, C = spec["server"]["w2"].shape
+            return {"kind": "paper_mlp",
+                    "data": dataclasses.asdict(PaperMLPConfig(
+                        n_features=M * f, n_classes=C, n_clients=M,
+                        client_embed=e, server_embed=se))}
+        return {"kind": "adapter", "data": self.adapter.name}
+
+    @staticmethod
+    def _model_from_manifest(m: dict, model_cfg: Optional[ModelLike]):
+        if model_cfg is not None:
+            return model_cfg
+        if m["kind"] == "model_config":
+            return ModelConfig(**m["data"])
+        if m["kind"] == "paper_mlp":
+            return PaperMLPConfig(**m["data"])
+        raise ValueError(
+            f"checkpoint was saved from an adapter-built session "
+            f"({m['data']!r}); pass the adapter back via "
+            "Federation.restore(path, model_cfg=adapter)")
+
+    def _split_opt_state(self, opt_state, engine_layout: bool):
+        """Split optimizer state on the party boundary: per-parameter
+        trees (momentum, adam moments) mirror the param layout and split
+        like params; the step clock lives with the server (the session's
+        round counter is server-side in the protocol)."""
+        opt_c, opt_s = {}, {}
+        for k, v in opt_state.items():
+            if k == "step":
+                opt_s[k] = v
+            elif engine_layout:
+                opt_c[k] = v["clients"]
+                opt_s[k] = v["server"]
+            else:
+                opt_c[k], opt_s[k] = split_params(v, self.client_keys)
+        return opt_c, opt_s
+
+    def _merge_opt_state(self, opt_c, opt_s, engine_layout: bool):
+        out = {}
+        for k, v in opt_s.items():
+            if k == "step":
+                out[k] = jnp.asarray(v)
+            elif engine_layout:
+                out[k] = {"clients": opt_c[k], "server": v}
+            else:
+                out[k] = merge_params(opt_c.get(k, {}), v)
+        return out

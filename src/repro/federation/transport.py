@@ -23,7 +23,7 @@ import jax
 
 from repro.core.methods import (SYNC_METHODS, ZOO_WIRE_METHODS,
                                 canonical_method)
-from repro.core.privacy import GaussianLossChannel, Ledger
+from repro.core.privacy import (GaussianLossChannel, Ledger, serve_messages)
 
 # fold_in salt deriving the downlink-noise key from a round/row key (2 is
 # taken by the engine's per-row direction RNG; keep them disjoint)
@@ -73,12 +73,36 @@ class Transport:
 
     # --------------------------------------------------------- accounting --
     def account(self, *, batch: int, embed: int, zoo_queries: int = 1,
-                n_clients: int = 1, n_rounds: int = 1) -> Ledger:
-        """Build the run's wire ledger (the Transport owns accounting)."""
-        ledger = Ledger()
+                n_clients: int = 1, n_rounds: int = 1,
+                ledger: Optional[Ledger] = None) -> Ledger:
+        """Build (or extend) the run's wire ledger — the Transport owns
+        accounting. Passing the ledger restored from a checkpoint makes a
+        resumed run's totals continue exactly where the saved run left
+        off."""
+        ledger = Ledger() if ledger is None else ledger
         ledger.log_round(self.method, batch, embed,
                          zoo_queries=zoo_queries if self.zoo_wire else 1,
                          n_clients=n_clients, n_rounds=n_rounds)
+        return ledger
+
+    def account_serve(self, *, batch: int, embed: int, n_steps: int = 1,
+                      n_gen: Optional[int] = None,
+                      ledger: Optional[Ledger] = None) -> Ledger:
+        """Log ``n_steps`` split-inference steps: per step the owning
+        client uploads one (batch, d_model) embedding, and on the
+        ``n_gen`` generation steps (all of them if not given) the server
+        returns the sampled token ids — prefill steps carry no downlink
+        (the clients already own the prompt). Serve traffic lands in the
+        same ledger as training, so a session's lifetime wire is one
+        total."""
+        n_gen = n_steps if n_gen is None else n_gen
+        if not 0 <= n_gen <= n_steps:
+            raise ValueError(f"n_gen={n_gen} outside [0, n_steps={n_steps}]")
+        ledger = Ledger() if ledger is None else ledger
+        ledger.messages.extend(
+            serve_messages(batch, embed, with_token=False)
+            * (n_steps - n_gen))
+        ledger.messages.extend(serve_messages(batch, embed) * n_gen)
         return ledger
 
     def releases(self, *, n_rounds: int, n_clients: int = 1,

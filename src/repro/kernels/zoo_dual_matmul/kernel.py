@@ -88,6 +88,79 @@ def _dual_matmul_stacked_kernel(x_ref, w_ref, u_ref, mu_ref,
     y_hat_ref[0] = (acc_ref[...] + mu_ref[0] * yu).astype(y_hat_ref.dtype)
 
 
+def _dual_matmul_stacked_bias_relu_kernel(x_ref, w_ref, u_ref, b_ref,
+                                          ub_ref, mu_ref, y_ref, y_hat_ref,
+                                          acc_ref):
+    """Stacked fan-out with the tabular client's bias+ReLU epilogue fused.
+
+    Same lane-innermost tiling as :func:`_dual_matmul_stacked_kernel`; the
+    scratch accumulator parks the RAW xW product (bias-free, so every
+    perturbation lane can re-derive its own pre-activation), and each
+    lane's bias add + ReLU runs on the tile while it is still resident in
+    VMEM — the activated outputs go straight to HBM, so the epilogue costs
+    zero extra memory traffic vs the unfused matmul alone (the unfused
+    path re-reads both outputs from HBM to add bias and clamp)."""
+    lane = pl.program_id(2)
+    x = x_ref[...]
+    b = b_ref[0]
+
+    @pl.when(lane == 0)
+    def _():
+        acc_ref[...] = jnp.dot(x, w_ref[...],
+                               preferred_element_type=jnp.float32)
+        y_ref[...] = jnp.maximum(acc_ref[...] + b, 0.0).astype(y_ref.dtype)
+
+    yu = jnp.dot(x, u_ref[0], preferred_element_type=jnp.float32)
+    mu = mu_ref[0]
+    # lane l pre-activation: x(W + μU_l) + (b + μu_b_l)
+    pre = acc_ref[...] + mu * yu + (b + mu * ub_ref[0])
+    y_hat_ref[0] = jnp.maximum(pre, 0.0).astype(y_hat_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def zoo_dual_matmul_stacked_bias_relu_pallas(x, w, us, b, ub, mu, *,
+                                             bm: int = 128, bn: int = 128,
+                                             interpret: bool = False):
+    """x (M, K), w (K, N), us (q, K, N), b (N,), ub (q, N), mu scalar ->
+    (y (M, N), y_hat (q, M, N)) with the epilogue fused:
+    y = relu(xW + b), ŷ_l = relu(x(W + μU_l) + b + μu_b_l)."""
+    M, K = x.shape
+    _, N = w.shape
+    q = us.shape[0]
+    assert us.shape == (q, K, N), (us.shape, (q, K, N))
+    assert b.shape == (N,) and ub.shape == (q, N), (b.shape, ub.shape)
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    mu_arr = jnp.asarray([mu], jnp.float32)
+    b2 = b.astype(jnp.float32)[None]                      # (1, N)
+    ub2 = ub.astype(jnp.float32)                          # (q, N)
+
+    grid = (M // bm, N // bn, q)
+    return pl.pallas_call(
+        _dual_matmul_stacked_bias_relu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j, l: (0, j)),
+            pl.BlockSpec((1, K, bn), lambda i, j, l: (l, 0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1,), lambda i, j, l: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+            pl.BlockSpec((1, bm, bn), lambda i, j, l: (l, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), x.dtype),
+            jax.ShapeDtypeStruct((q, M, N), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, us, b2, ub2, mu_arr)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def zoo_dual_matmul_stacked_pallas(x, w, us, mu, *, bm: int = 128,
                                    bn: int = 128, interpret: bool = False):

@@ -15,3 +15,15 @@ def zoo_dual_matmul_stacked_ref(x, w, us, mu):
     yu = jnp.einsum("mk,qkn->qmn", x.astype(jnp.float32),
                     us.astype(jnp.float32))
     return y.astype(x.dtype), (y[None] + mu * yu).astype(x.dtype)
+
+
+def zoo_dual_matmul_stacked_bias_relu_ref(x, w, us, b, ub, mu):
+    """Unfused oracle for the bias+ReLU epilogue: y = relu(xW + b),
+    ŷ_l = relu(x(W + μU_l) + b + μu_b_l)."""
+    y, y_hat = zoo_dual_matmul_stacked_ref(x, w, us, mu)
+    clean = jnp.maximum(y.astype(jnp.float32) + b.astype(jnp.float32), 0.0)
+    pert = jnp.maximum(
+        y_hat.astype(jnp.float32)
+        + (b.astype(jnp.float32)[None] + mu * ub.astype(jnp.float32))[:, None, :],
+        0.0)
+    return clean.astype(x.dtype), pert.astype(x.dtype)

@@ -26,7 +26,9 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import (INPUT_SHAPES, TrainConfig, VFLConfig, get_config,  # noqa: E402
                            get_shape, list_archs)
-from repro.core.cascade import make_cascaded_step  # noqa: E402
+from repro.core.async_engine import EngineConfig  # noqa: E402
+from repro.core.methods import METHOD_ALIASES, canonical_method  # noqa: E402
+from repro.federation import Federation  # noqa: E402
 from repro.launch import costmodel  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
@@ -75,7 +77,9 @@ class Variant:
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-            variant: Variant = Variant(), verbose: bool = True) -> dict:
+            variant: Variant = Variant(), method: str = "cascaded",
+            verbose: bool = True) -> dict:
+    method = canonical_method(method)
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     reason = skip_reason(cfg, shape)
@@ -122,8 +126,13 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             vfl = VFLConfig(zoo_queries=variant.zoo_queries,
                             fused_dual=variant.fused_dual)
             opt = sgd(0.01)
-            step = make_cascaded_step(model.loss_fn, model.client_keys, vfl,
-                                      opt, vocab=cfg.padded_vocab)
+            # per-method lowering through the session: the same
+            # Federation that drives real training resolves the step
+            # factory (cascaded / vafl / split / zoo-vfl), with the
+            # variant-built model (window/remat switches) injected
+            fed = Federation.build(cfg, vfl, EngineConfig(method=method),
+                                   seq_len=shape.seq_len, model=model)
+            step = fed.sync_step(opt)
             opt_state_abs = {"step": jax.ShapeDtypeStruct((), jnp.int32)}
             key_abs = jax.eval_shape(lambda: jax.random.key(0))
             lowered = jax.jit(
@@ -173,6 +182,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         "arch": arch,
         "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
+        "method": method,
         "variant": variant.name,
         "window": window,
         "kind": shape.kind,
@@ -206,8 +216,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def save_result(res: dict, out_dir: str = OUT_DIR):
     os.makedirs(out_dir, exist_ok=True)
+    # the cascaded artifacts keep their historical names (report.py
+    # tables key on them); baseline-method sweeps get a method suffix
+    suffix = ("" if res.get("method", "cascaded") == "cascaded"
+              else f"_{res['method']}")
     name = f"{res['arch']}_{res['shape']}_{res.get('mesh','skip')}" \
-           f"_{res.get('variant','baseline')}.json"
+           f"_{res.get('variant','baseline')}{suffix}.json"
     with open(os.path.join(out_dir, name), "w") as f:
         json.dump(res, f, indent=2)
 
@@ -217,6 +231,10 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--all", action="store_true")
+    # train shapes lower the chosen framework's step through the session
+    # (every alias spelling accepted, canonicalized at the boundary)
+    ap.add_argument("--method", default="cascaded",
+                    choices=sorted(METHOD_ALIASES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--window-gather", action="store_true")
@@ -258,7 +276,8 @@ def main():
         for shape in shapes:
             for mp in meshes:
                 try:
-                    res = run_one(arch, shape, multi_pod=mp, variant=variant)
+                    res = run_one(arch, shape, multi_pod=mp, variant=variant,
+                                  method=args.method)
                     save_result(res, args.out)
                     if "skipped" in res:
                         print(f"[dryrun] {arch:22s} {shape:12s} SKIP: "

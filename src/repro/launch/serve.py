@@ -1,11 +1,20 @@
 """Serving driver: batched prefill + decode with KV caches / SSM states.
 
-On CPU this serves the reduced configs (the ``serve_decode`` example); the
-same step functions are what the dry-run lowers for ``decode_32k`` /
+Decoder-only archs serve SPLIT by default now — the ``Federation``
+session's serve plane (``fed.decode``) keeps the training party split at
+inference: client parties embed their token spans, the server owns
+backbone + head + caches, and every step's wire traffic (one embedding
+up, token ids down) lands in the Transport's ledger. The pre-session
+global path survives as the back-compat shim (``n_clients=0``) and the
+fallback for families that cannot cross the VFL wire (encoder-decoder /
+VLM need a modality frontend on the wire).
+
+On CPU this serves the reduced configs (the ``serve_decode`` example);
+the same step functions are what the dry-run lowers for ``decode_32k`` /
 ``long_500k`` on the production mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
-        --batch 4 --prompt-len 16 --gen-len 16
+        --batch 4 --prompt-len 16 --gen-len 16 [--clients 2]
 """
 from __future__ import annotations
 
@@ -17,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ShapeConfig, get_config, list_archs, reduced
+from repro.configs import get_config, list_archs, reduced
 from repro.models import common
 from repro.models.model_api import build_cache_specs, build_model
 
@@ -29,12 +38,71 @@ def _zero_caches(cfg, batch: int, seq: int):
         is_leaf=lambda x: hasattr(x, "logical"))
 
 
+def _splittable(cfg) -> bool:
+    return not (cfg.is_encoder_decoder or cfg.family == "vlm")
+
+
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 16,
           gen_len: int = 16, use_reduced: bool = True, seed: int = 0,
-          temperature: float = 0.0) -> dict:
+          temperature: float = 0.0, n_clients: int = 0) -> dict:
+    """``n_clients >= 1`` routes through the session's split serve plane
+    (falling back to the global path for families that cannot split);
+    ``n_clients=0`` is the pre-session global decode, bit-identical to
+    the split path on replicated client tables."""
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg, remat=False)
+    if n_clients and _splittable(cfg):
+        return _serve_federated(arch, cfg, batch=batch,
+                                prompt_len=prompt_len, gen_len=gen_len,
+                                seed=seed, temperature=temperature,
+                                n_clients=n_clients)
+    res = _serve_global(arch, cfg, batch=batch, prompt_len=prompt_len,
+                        gen_len=gen_len, seed=seed, temperature=temperature)
+    if n_clients:
+        res["fallback"] = (f"{cfg.family}/encdec family needs a modality "
+                           "frontend on the wire; served global")
+    return res
+
+
+# ------------------------------------------------- split (session) path ---
+
+def _serve_federated(arch: str, cfg, *, batch: int, prompt_len: int,
+                     gen_len: int, seed: int, temperature: float,
+                     n_clients: int) -> dict:
+    from repro.federation import Federation
+
+    # the party span split covers the full served window
+    max_seq = prompt_len + gen_len
+    seq_len = -(-max_seq // n_clients) * n_clients
+    fed = Federation.build(cfg, n_clients=n_clients, seq_len=seq_len)
+    key = jax.random.key(seed)
+    params = common.materialize(fed.model.param_specs, key)
+
+    toks = jax.random.randint(jax.random.fold_in(key, 1),
+                              (batch, prompt_len), 0, cfg.vocab_size)
+    res = fed.decode(params, toks, gen_len=gen_len,
+                     temperature=temperature, key=key)
+    gen = res.tokens
+    assert gen.shape == (batch, gen_len)
+    assert np.isfinite(np.asarray(res.logits, np.float32)).all()
+    return {
+        "arch": arch, "batch": batch, "mode": "federated",
+        "clients": n_clients,
+        "prompt_len": prompt_len, "gen_len": gen_len,
+        "prefill_s": round(res.prefill_s, 2),
+        "decode_tok_per_s": round(batch * gen_len
+                                  / max(res.decode_s, 1e-9), 1),
+        "wire_bytes": res.wire_bytes,
+        "wire_has_gradients": res.transmits_gradients,
+        "sample_output": gen[0, :8].tolist(),
+    }
+
+
+# ---------------------------------------------- global back-compat shim ---
+
+def _serve_global(arch: str, cfg, *, batch: int, prompt_len: int,
+                  gen_len: int, seed: int, temperature: float) -> dict:
     max_seq = prompt_len + gen_len
     model = build_model(cfg, max_seq=max_seq)
     key = jax.random.key(seed)
@@ -81,7 +149,7 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 16,
     assert gen.shape == (batch, gen_len)
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     return {
-        "arch": arch, "batch": batch,
+        "arch": arch, "batch": batch, "mode": "global",
         "prompt_len": prompt_len, "gen_len": gen_len,
         "prefill_s": round(t_prefill, 2),
         "decode_tok_per_s": round(batch * gen_len / max(t_decode, 1e-9), 1),
@@ -97,11 +165,14 @@ def main():
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--reduced", action="store_true", default=True)
+    # 0 = the pre-session global path; >=1 serves split via fed.decode
+    ap.add_argument("--clients", type=int, default=2)
     args = ap.parse_args()
     print(json.dumps(serve(args.arch, batch=args.batch,
                            prompt_len=args.prompt_len, gen_len=args.gen_len,
                            temperature=args.temperature,
-                           use_reduced=args.reduced), indent=2))
+                           use_reduced=args.reduced,
+                           n_clients=args.clients), indent=2))
 
 
 if __name__ == "__main__":

@@ -13,13 +13,26 @@ CLI accepts every spelling in ``repro.core.methods.METHOD_ALIASES`` and
 canonicalizes at the boundary — step factories and the ledger only ever
 see canonical names.
 
+Checkpointing goes through the session lifecycle: ``--checkpoint`` calls
+``fed.save`` (per-party directories + step + optimizer/schedule state +
+ledger totals + spent DP budget) and ``--resume PATH`` continues from a
+saved session — the restored run re-derives the same batches, per-step
+keys and the ORIGINAL schedule horizon from the saved state, so it
+matches an uninterrupted run allclose with ledger and (ε, δ) totals
+exactly continued (exactly equivalent for step-stationary schedules;
+decaying schedules keep their saved total_steps rather than silently
+re-stretching, running at the tail lr past the original horizon).
+
     PYTHONPATH=src python -m repro.launch.train --arch phi3-mini-3.8b \
         --reduced --steps 100 --method cascaded [--dp-epsilon 1.0]
+    PYTHONPATH=src python -m repro.launch.train --resume ck/ --steps 200 \
+        --checkpoint ck2/
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import itertools
 import json
 import time
 from typing import Optional
@@ -28,68 +41,104 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
 from repro.configs import VFLConfig, get_config, list_archs, reduced
 from repro.core.async_engine import EngineConfig
 from repro.core.methods import METHOD_ALIASES, canonical_method
 from repro.core.privacy import GaussianLossChannel
 from repro.data import lm_token_batches
-from repro.federation import Federation
+from repro.federation import Federation, SessionState
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import common
 from repro.optim import make_schedule, sgd
 from repro.sharding.rules import PARAM_RULES
 
 
-def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
-          method: str = "cascaded", lr: float = 0.01, mu: float = 1e-3,
-          lr_client: float = 0.0, use_reduced: bool = True, seed: int = 0,
+def train(arch: str = "", *, steps: int = 100, batch: int = 8,
+          seq: int = 128, method: str = "cascaded", lr: float = 0.01,
+          mu: float = 1e-3, lr_client: float = 0.0,
+          use_reduced: bool = True, seed: int = 0,
           log_every: int = 10, zoo_queries: int = 1,
           active_rows: bool = False, production_mesh: bool = False,
           checkpoint_path: str = "", schedule: str = "constant",
-          noise: Optional[GaussianLossChannel] = None) -> dict:
-    cfg = get_config(arch)
-    if use_reduced:
-        cfg = reduced(cfg)
-    method = canonical_method(method)
+          noise: Optional[GaussianLossChannel] = None,
+          resume: str = "") -> dict:
+    start = 0
+    state = SessionState()
+    sched_total = steps
+    if resume:
+        # the saved session is the source of truth for everything that
+        # must match the original run (model/vfl/engine/noise configs and
+        # the driver knobs stashed in the metadata); ``steps`` stays a
+        # TOTAL step count, so resume at step k with steps=2k runs k more
+        fed, params, state = Federation.restore(resume)
+        meta = _driver_metadata(resume, state.metadata)
+        arch, method = meta["arch"], fed.transport.method
+        batch, seq, seed = meta["batch"], meta["seq"], meta["seed"]
+        lr, schedule = meta["lr"], meta["schedule"]
+        # rebuild the EXACT schedule the saved run trained under — a
+        # decaying schedule must not silently re-stretch to the new total
+        # (resume-equivalence to an uninterrupted run is exact for
+        # step-stationary schedules; decaying ones continue the original
+        # horizon and run at their tail value past it)
+        sched_total = meta.get("schedule_total_steps", steps)
+        zoo_queries = fed.vfl.zoo_queries
+        cfg = fed.model_cfg
+        noise = fed.transport.noise
+        start = state.step
+        if steps <= start:
+            raise ValueError(
+                f"--steps {steps} is a total step count; the resumed "
+                f"session is already at step {start}")
+    else:
+        cfg = get_config(arch)
+        if use_reduced:
+            cfg = reduced(cfg)
+        method = canonical_method(method)
+        vfl = VFLConfig(mu=mu, lr_server=lr, lr_client=lr_client or lr,
+                        zoo_queries=zoo_queries, active_rows_only=active_rows)
+        fed = Federation.build(cfg, vfl,
+                               EngineConfig(method=method, steps=steps,
+                                            batch_size=batch),
+                               seq_len=seq, noise=noise)
+        if not lr_client:
+            # per-party lr (paper §VI-A-d tunes them separately): the
+            # sphere two-point estimator's norm scales ~√d·|∇|, so
+            # normalize the client lr by √d_client to keep update
+            # magnitudes FOO-comparable
+            from repro.core.partition import split_params
+            model = fed.model
+            client_spec, _ = split_params(model.param_specs,
+                                          model.client_keys)
+            d_client = sum(int(np.prod(s.shape))
+                           for s in jax.tree.leaves(
+                               client_spec,
+                               is_leaf=lambda x: hasattr(x, "logical")))
+            lr_client = lr / max(np.sqrt(d_client), 1.0)
+            fed.vfl = dataclasses.replace(vfl, lr_client=lr_client)
 
     mesh = make_production_mesh() if production_mesh else make_host_mesh()
-    vfl = VFLConfig(mu=mu, lr_server=lr, lr_client=lr_client or lr,
-                    zoo_queries=zoo_queries, active_rows_only=active_rows)
-    fed = Federation.build(cfg, vfl,
-                           EngineConfig(method=method, steps=steps,
-                                        batch_size=batch),
-                           seq_len=seq, noise=noise)
     model = fed.model
-    if not lr_client:
-        # per-party lr (paper §VI-A-d tunes them separately): the sphere
-        # two-point estimator's norm scales ~√d·|∇|, so normalize the
-        # client lr by √d_client to keep update magnitudes FOO-comparable
-        from repro.core.partition import split_params
-        client_spec, _ = split_params(model.param_specs, model.client_keys)
-        d_client = sum(int(np.prod(s.shape))
-                       for s in jax.tree.leaves(
-                           client_spec, is_leaf=lambda x: hasattr(x, "logical")))
-        lr_client = lr / max(np.sqrt(d_client), 1.0)
-        vfl = dataclasses.replace(vfl, lr_client=lr_client)
-        fed.vfl = vfl
-    opt = sgd(make_schedule(schedule, lr, total_steps=steps))
+    opt = sgd(make_schedule(schedule, lr, total_steps=sched_total))
     step_fn = fed.sync_step(opt)
 
     key = jax.random.key(seed)
-    params = common.materialize(model.param_specs, key)
-    params = jax.device_put(
-        params, common.shardings(model.param_specs, mesh, PARAM_RULES))
-    opt_state = opt.init(params)
+    shardings = common.shardings(model.param_specs, mesh, PARAM_RULES)
+    if not resume:
+        params = common.materialize(model.param_specs, key)
+    params = jax.device_put(params, shardings)
+    opt_state = (state.opt_state if state.opt_state is not None
+                 else opt.init(params))
 
-    data = lm_token_batches(seed + 1, cfg.vocab_size, batch, seq)
+    # deterministic batch stream: a resumed run skips the first ``start``
+    # draws, so step i consumes the exact batch the uninterrupted run did
+    data = itertools.islice(
+        lm_token_batches(seed + 1, cfg.vocab_size, batch, seq),
+        start, steps)
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
 
     losses, t0 = [], time.time()
     with mesh:
-        for i, nb in enumerate(data):
-            if i >= steps:
-                break
+        for i, nb in enumerate(data, start=start):
             b = {k: jnp.asarray(v) for k, v in nb.items()}
             if cfg.family == "vlm":
                 b["patch_embeds"] = jnp.zeros(
@@ -107,27 +156,48 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
                       f"|g_s|={float(out.grad_server_norm):.3e}", flush=True)
 
     wall = time.time() - t0
-    # the Transport owns the wire: one ledger call covers the run (one
-    # activated client party — the embedding owner — per sync round)
+    n_new = steps - start
+    # the Transport owns the wire: one ledger call covers this segment
+    # (one activated client party — the embedding owner — per sync round),
+    # EXTENDING the restored ledger so lifetime totals continue exactly
     ledger = fed.transport.account(batch=batch, embed=cfg.d_model,
-                                   zoo_queries=zoo_queries, n_rounds=steps)
+                                   zoo_queries=zoo_queries, n_rounds=n_new,
+                                   ledger=state.ledger)
+    dp_releases = state.dp_releases
+    if noise is not None:
+        dp_releases += fed.transport.releases(n_rounds=n_new,
+                                              zoo_queries=zoo_queries)
     result = {
         "arch": arch, "method": method, "steps": steps,
         "loss_first": losses[0], "loss_last": float(np.mean(losses[-5:])),
         "wall_s": round(wall, 1),
-        "steps_per_s": round(steps / wall, 2),
+        "steps_per_s": round(n_new / wall, 2),
         "wire_bytes_per_round": ledger.total_bytes // max(steps, 1),
         "wire_has_gradients": ledger.transmits_gradients,
     }
+    if resume:
+        result["resumed_from"], result["start_step"] = resume, start
     if noise is not None:
-        eps, delta = fed.transport.privacy_spent(
-            fed.transport.releases(n_rounds=steps, zoo_queries=zoo_queries))
+        eps, delta = fed.transport.privacy_spent(dp_releases)
         result["dp_epsilon"], result["dp_delta"] = eps, delta
     if checkpoint_path:
-        save_checkpoint(checkpoint_path, params, step=steps,
-                        metadata={"arch": arch, "method": method})
+        fed.save(checkpoint_path, params, step=steps, opt_state=opt_state,
+                 ledger=ledger, dp_releases=dp_releases,
+                 metadata={"arch": arch, "batch": batch, "seq": seq,
+                           "seed": seed, "lr": lr, "schedule": schedule,
+                           "schedule_total_steps": sched_total})
         result["checkpoint"] = checkpoint_path
     return result
+
+
+def _driver_metadata(path: str, meta: dict) -> dict:
+    """Validate the driver knobs ``fed.save`` stashed in the session."""
+    missing = {"arch", "batch", "seq", "seed", "lr", "schedule"} - set(meta)
+    if missing:
+        raise ValueError(
+            f"checkpoint {path!r} was not written by the train driver "
+            f"(metadata missing {sorted(missing)})")
+    return meta
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -150,6 +220,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--checkpoint", default="")
+    # continue a saved session; --steps then means TOTAL steps (the run
+    # does steps - saved_step more). Model/method/data knobs come from
+    # the checkpoint, not the CLI.
+    ap.add_argument("--resume", default="")
     ap.add_argument("--schedule", default="constant")
     # DP loss channel (0 = off): clip + per-release (ε, δ) target
     ap.add_argument("--dp-epsilon", type=float, default=0.0)
@@ -169,7 +243,7 @@ def main():
                 active_rows=args.active_rows,
                 production_mesh=args.production_mesh,
                 checkpoint_path=args.checkpoint, schedule=args.schedule,
-                noise=noise)
+                noise=noise, resume=args.resume)
     print(json.dumps(res, indent=2))
 
 

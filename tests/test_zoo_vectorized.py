@@ -171,6 +171,52 @@ def test_stacked_kernel_lane_directions():
                                atol=1e-2, rtol=1e-2)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N,q", [(128, 64, 128, 4), (64, 32, 128, 3)])
+def test_stacked_kernel_bias_relu_epilogue(M, K, N, q, dtype):
+    """The fused bias+ReLU epilogue (the tabular client path) matches the
+    unfused oracle in interpret mode, lane for lane."""
+    from repro.kernels.zoo_dual_matmul.ref import (
+        zoo_dual_matmul_stacked_bias_relu_ref)
+    ks = jax.random.split(jax.random.key(M + N + q), 5)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    w = jax.random.normal(ks[1], (K, N), dtype)
+    us = jax.random.normal(ks[2], (q, K, N), dtype)
+    b = jax.random.normal(ks[3], (N,), jnp.float32)
+    ub = jax.random.normal(ks[4], (q, N), jnp.float32)
+    y, y_hat = zoo_dual_matmul_stacked(x, w, us, 1e-2, b=b, ub=ub,
+                                       bm=64, bn=64)
+    ry, ry_hat = zoo_dual_matmul_stacked_bias_relu_ref(x, w, us, b, ub, 1e-2)
+    tol = 1e-4 if dtype == jnp.float32 else 1.5e-1
+    assert float(jnp.min(y)) >= 0.0 and float(jnp.min(y_hat)) >= 0.0
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ry, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(y_hat, np.float32),
+                               np.asarray(ry_hat, np.float32),
+                               atol=tol, rtol=tol)
+    with pytest.raises(ValueError, match="both b and ub"):
+        zoo_dual_matmul_stacked(x, w, us, 1e-2, b=b)
+
+
+def test_tabular_pallas_lanes_match_xla_lanes():
+    """tabular_adapter(use_pallas_lanes=True) — the fused-epilogue kernel
+    path — produces the same (1+q) activation lanes as the XLA oracle."""
+    from repro.core import zoo
+    from repro.core.adapters import tabular_adapter
+    cfg = PaperMLPConfig(n_features=512, n_classes=4, n_clients=4,
+                         client_embed=128, server_embed=64)
+    params = common.materialize(tabular.param_specs(cfg), jax.random.key(0))
+    c0 = jax.tree.map(lambda a: a[0], params["clients"])
+    x = jax.random.normal(jax.random.key(1), (64, cfg.features_per_client))
+    u_stack, _ = zoo.sample_directions(jax.random.key(2), c0, 3)
+    lanes_pallas = tabular_adapter(cfg, use_pallas_lanes=True).client_lanes(
+        c0, u_stack, 1e-3, x)
+    lanes_xla = tabular_adapter(cfg).client_lanes(c0, u_stack, 1e-3, x)
+    assert lanes_pallas.shape == (4, 64, cfg.client_embed)
+    np.testing.assert_allclose(np.asarray(lanes_pallas),
+                               np.asarray(lanes_xla), atol=2e-5, rtol=2e-5)
+
+
 # ---------------------------------------------- async engine + adapters --
 
 @pytest.fixture(scope="module")
