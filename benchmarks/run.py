@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
                               (subprocess: forces 8 virtual host devices)
   bench_lm_async            — reduced transformer server under the async
                               engine via Federation, q ∈ {1,4} + DP point
+  bench_serve_throughput    — fused split-serve engine: seed per-token
+                              loop vs scan decode vs batched vs continuous
+                              batching (emits BENCH_serve.json)
   bench_roofline            — §Roofline terms from the dry-run artifacts
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
@@ -231,6 +234,14 @@ def bench_lm_async(fast: bool):
     bench(fast, row=row)
 
 
+# ================================================ serve throughput =========
+
+def bench_serve_throughput(fast: bool):
+    from benchmarks.serve_throughput import \
+        bench_serve_throughput as bench
+    bench(fast, row=row)
+
+
 # ======================================================== roofline =========
 
 def bench_roofline(fast: bool):
@@ -265,6 +276,7 @@ BENCHES = {
     "zoo_fanout": bench_zoo_fanout,
     "async_scale": bench_async_scale,
     "lm_async": bench_lm_async,
+    "serve_throughput": bench_serve_throughput,
     "roofline": bench_roofline,
 }
 

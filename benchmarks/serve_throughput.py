@@ -1,0 +1,221 @@
+"""Serve-plane throughput: the fused split-serve engine vs the seed loop.
+
+Four ways to decode the same request mix at toy size, all through the
+split party plane (clients embed, server owns backbone + caches):
+
+* ``single_seed``  — the PR-4 baseline: one request at a time, one
+  jitted step per token, Python dispatch + host sync per token.
+* ``single_scan``  — one request at a time through the fused engine
+  (chunked prefill + one compiled ``lax.scan`` decode, on-device
+  sampling, one host transfer).
+* ``batched``      — all requests as ONE (B, ·) batch through the fused
+  engine: one embedding upload per step amortizes the uplink across the
+  whole batch (the communication-efficiency lever of DPZV-style VFL).
+* ``continuous``   — the ``ServeScheduler``: half as many slots as
+  requests, admissions mid-flight, per-request ledgers.
+
+Every path is warmed up before timing (compile is reported separately by
+the engine and excluded here), and the bench verifies the guarantees the
+speed must not cost: split decode stays bitwise-equal to global decode,
+and per-request wire totals are identical across all four paths.
+
+Emits ``BENCH_serve.json`` (tokens/s per mode, uplink bytes per token,
+speedups, invariant checks) — the serve-perf trajectory record.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--full] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_OUT = "BENCH_serve.json"
+
+
+def _toy_session(n_clients: int, seq_len: int):
+    from repro.configs import get_config, reduced
+    from repro.federation import Federation
+    cfg = reduced(get_config("phi3-mini-3.8b"), d_model=64, n_heads=2,
+                  n_kv_heads=1, d_ff=128, vocab_size=256, remat=False)
+    fed = Federation.build(cfg, n_clients=n_clients, seq_len=seq_len)
+    return cfg, fed
+
+
+def _seed_single_decode(fed, params, prompts, gen_len, vocab):
+    """The seed (PR 4) serve loop, inlined as the baseline: per-token
+    jitted step, Python-dispatched, ``np.asarray`` host sync per token."""
+    from repro.federation import serving
+    step = serving.make_serve_step(fed.adapter, fed.n_clients, fed.seq_len)
+    B, PL = prompts.shape
+    caches = serving.zero_caches(fed.adapter, B, PL + gen_len)
+    logits = None
+    for t in range(PL):
+        logits, caches = step(params, prompts[:, t:t + 1], caches, t)
+    out = []
+    for t in range(PL, PL + gen_len):
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        nxt = jnp.minimum(nxt, vocab - 1).astype(jnp.int32)
+        out.append(np.asarray(nxt))            # host sync per token (seed)
+        logits, caches = step(params, nxt[:, None], caches, t)
+    return np.stack(out, axis=1)
+
+
+def _global_greedy_decode(cfg, model, gp, toks, gen_len):
+    """Global (unsplit) per-token decode — the bitwise oracle."""
+    from repro.models.model_api import build_cache_specs
+    B, PL = toks.shape
+    caches = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        build_cache_specs(cfg, B, PL + gen_len),
+        is_leaf=lambda x: hasattr(x, "logical"))
+    decode = jax.jit(model.decode_fn, donate_argnums=(2,))
+    logits = None
+    for t in range(PL):
+        logits, caches = decode(gp, {"tokens": toks[:, t:t + 1]}, caches, t)
+    out = []
+    for t in range(PL, PL + gen_len):
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        nxt = jnp.minimum(nxt, cfg.vocab_size - 1).astype(jnp.int32)
+        out.append(np.asarray(nxt))
+        logits, caches = decode(gp, {"tokens": nxt[:, None]}, caches, t)
+    return np.stack(out, axis=1)
+
+
+def bench_serve_throughput(fast: bool = True, row=None, out=DEFAULT_OUT):
+    from repro.models import common
+    from repro.models.model_api import build_model
+
+    n_req = 8
+    PL, GL = (8, 32) if fast else (16, 128)
+    n_clients = 2
+    seq_len = PL + GL
+    cfg, fed = _toy_session(n_clients, seq_len)
+    key = jax.random.key(0)
+    model = build_model(cfg, max_seq=seq_len)
+    gp = common.materialize(model.param_specs, key)
+    params = fed.params_from_global(gp)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 1), (n_req, PL), 0, cfg.vocab_size))
+    total_tokens = n_req * GL
+
+    results = {}
+    tokens_per_s = {}
+    uplink_per_token = {}
+
+    def record(name, seconds, ledgers, tokens):
+        tokens_per_s[name] = tokens / max(seconds, 1e-9)
+        up = sum(l.bytes_by_kind().get("embedding", 0) for l in ledgers)
+        uplink_per_token[name] = up / tokens
+        if row is not None:
+            row(f"serve_{name}", seconds / tokens * 1e6,
+                f"tok_per_s={tokens_per_s[name]:.1f};"
+                f"uplink_B_per_tok={uplink_per_token[name]:.0f}")
+
+    # ------------------------------------------------ seed baseline -----
+    from repro.core.privacy import Ledger
+    _seed_single_decode(fed, params, jnp.asarray(prompts[:1]), GL,
+                        cfg.vocab_size)                        # warm-up
+    tic = time.perf_counter()
+    seed_tokens = []
+    seed_ledgers = []
+    for i in range(n_req):
+        seed_tokens.append(_seed_single_decode(
+            fed, params, jnp.asarray(prompts[i:i + 1]), GL,
+            cfg.vocab_size))
+        led = fed.transport.account_serve(batch=1, embed=cfg.d_model,
+                                          n_steps=PL + GL, n_gen=GL,
+                                          ledger=Ledger())
+        seed_ledgers.append(led)
+    record("single_seed", time.perf_counter() - tic, seed_ledgers,
+           total_tokens)
+    seed_tokens = np.concatenate(seed_tokens, axis=0)
+
+    # ------------------------------------- fused engine, one at a time --
+    fed.decode(params, prompts[:1], gen_len=GL)                # warm-up
+    tic = time.perf_counter()
+    scan_tokens = []
+    scan_ledgers = []
+    for i in range(n_req):
+        r = fed.decode(params, prompts[i:i + 1], gen_len=GL)
+        scan_tokens.append(r.tokens)
+        scan_ledgers.append(r.ledger)
+    record("single_scan", time.perf_counter() - tic, scan_ledgers,
+           total_tokens)
+    scan_tokens = np.concatenate(scan_tokens, axis=0)
+
+    # ------------------------------------------- fused engine, batched --
+    fed.decode(params, prompts, gen_len=GL)                    # warm-up
+    tic = time.perf_counter()
+    rb = fed.decode(params, prompts, gen_len=GL)
+    record("batched", time.perf_counter() - tic, [rb.ledger], total_tokens)
+
+    # -------------------------------------------- continuous batching ---
+    def run_continuous():
+        srv = fed.serve(params, max_batch=max(1, n_req // 2))
+        for i in range(n_req):
+            srv.submit(prompts[i], GL)
+        return srv, srv.run()
+    run_continuous()                                           # warm-up
+    srv, cres = run_continuous()
+    record("continuous", srv.last_run_s,
+           [r.ledger for r in cres], total_tokens)
+
+    # --------------------------------------------------- invariants -----
+    global_tokens = _global_greedy_decode(cfg, model, gp,
+                                          jnp.asarray(prompts), GL)
+    split_equals_global = bool(np.array_equal(rb.tokens, global_tokens))
+    paths_agree = bool(
+        np.array_equal(seed_tokens, scan_tokens)
+        and np.array_equal(scan_tokens, rb.tokens)
+        and all(np.array_equal(r.tokens, scan_tokens[i])
+                for i, r in enumerate(cres)))
+    per_req = seed_ledgers[0].total_bytes
+    wire_unchanged = bool(
+        all(l.total_bytes == per_req for l in scan_ledgers)
+        and all(r.ledger.total_bytes == per_req for r in cres)
+        and rb.ledger.total_bytes == n_req * per_req)
+
+    results = {
+        "config": {"arch": cfg.arch_id, "d_model": cfg.d_model,
+                   "vocab": cfg.vocab_size, "n_clients": n_clients,
+                   "n_requests": n_req, "prompt_len": PL, "gen_len": GL},
+        "tokens_per_s": {k: round(v, 1) for k, v in tokens_per_s.items()},
+        "uplink_bytes_per_token": {k: round(v, 1)
+                                   for k, v in uplink_per_token.items()},
+        "speedup_scan_vs_seed": round(
+            tokens_per_s["single_scan"] / tokens_per_s["single_seed"], 2),
+        "speedup_batched_vs_seed": round(
+            tokens_per_s["batched"] / tokens_per_s["single_seed"], 2),
+        "speedup_continuous_vs_seed": round(
+            tokens_per_s["continuous"] / tokens_per_s["single_seed"], 2),
+        "split_equals_global": split_equals_global,
+        "all_paths_same_tokens": paths_agree,
+        "wire_per_request_unchanged": wire_unchanged,
+    }
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    if row is not None:
+        row("serve_speedup", 0.0,
+            f"batched_vs_seed={results['speedup_batched_vs_seed']:.1f}x;"
+            f"split_eq_global={split_equals_global};"
+            f"wire_unchanged={wire_unchanged}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", dest="fast", action="store_false",
+                    default=True)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    res = bench_serve_throughput(args.fast, row=None, out=args.out)
+    print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,14 @@
 """Serve small models with batched requests across model families —
 SPLIT inference through the Federation session's serve plane: the client
-parties embed their token spans, the server runs backbone + head with
-KV/SSM caches, and every step's wire traffic (embedding up, token ids
-down) lands in the session ledger. Covers KV-cache decode (granite MQA),
-SSM-state decode (rwkv6) and hybrid decode (zamba2); whisper is
+parties embed their token spans (whole spans in one chunked-prefill
+upload), the server runs backbone + head with KV/SSM caches through one
+compiled decode scan, and every step's wire traffic (embedding up, token
+ids down) lands in the session ledger. Covers KV-cache decode (granite
+MQA), SSM-state decode (rwkv6) and hybrid decode (zamba2); whisper is
 encoder-decoder — its modality frontend cannot cross the VFL wire, so it
-exercises the global back-compat path.
+exercises the global back-compat path. The granite run also drains the
+same request load through the continuous-batching scheduler
+(``fed.serve``) to show the churn path end to end.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -21,6 +24,13 @@ def main():
         print(json.dumps(res), flush=True)
         assert res["mode"] == "federated"
         assert res["wire_bytes"] > 0 and not res["wire_has_gradients"]
+    # continuous batching: 4 requests through 2 slots, admissions
+    # mid-flight, per-request exact wire
+    res = serve("granite-20b", batch=4, prompt_len=12, gen_len=12,
+                temperature=0.8, n_clients=2, continuous=True, max_batch=2)
+    print(json.dumps(res), flush=True)
+    assert res["mode"] == "continuous" and res["slots"] == 2
+    assert res["wire_bytes"] > 0 and not res["wire_has_gradients"]
     # enc-dec fallback: asked to split, served global with a reason
     res = serve("whisper-medium", batch=4, prompt_len=12, gen_len=12,
                 temperature=0.8, n_clients=2)

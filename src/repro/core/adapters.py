@@ -56,11 +56,17 @@ class ModelAdapter:
     Serve plane (optional — set by :func:`from_model_config`; tabular
     adapters have no decode concept and leave them ``None``):
 
-    * ``client_embed(client_m, tokens)``  -> (bs, 1, d): the owning party
-      embeds the current token — its only serve-time uplink.
+    * ``client_embed(client_m, tokens)``  -> (bs, S, d): the owning party
+      embeds its tokens — one call covers a single decode token (S=1) or
+      a whole prompt span (chunked prefill), its only serve-time uplink.
     * ``server_decode(server, x, caches, cur_pos)`` -> (logits, caches):
       backbone + head over the uploaded embedding; KV/SSM caches and
       logits never leave the server.
+    * ``server_prefill(server, x, caches, t0)`` -> (logits, caches):
+      consume a whole (bs, chunk, d) span upload in ONE compiled pass
+      (positions t0 .. t0+chunk) — the chunked-prefill hook. Optional:
+      the serve engine falls back to the per-token step loop for
+      adapters that leave it ``None``.
     * ``cache_specs(batch, max_seq)``     -> decode-state spec tree.
     """
     name: str
@@ -72,6 +78,7 @@ class ModelAdapter:
     row_mask: Optional[Callable] = None
     client_embed: Optional[Callable] = None
     server_decode: Optional[Callable] = None
+    server_prefill: Optional[Callable] = None
     cache_specs: Optional[Callable] = None
 
     def init_params(self, key):
@@ -306,11 +313,12 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
     # path, so split decode is bitwise-equal to global decode.
 
     def client_embed(client_m, tokens):
-        """tokens (bs, 1) int32 -> (bs, 1, d) — the serve-time uplink."""
+        """tokens (bs, S) int32 -> (bs, S, d) — the serve-time uplink.
+        S=1 per decode step; S=chunk for a whole prompt span (chunked
+        prefill uploads the span in one batched embed call)."""
         return embed_lookup(client_m["embed"], tokens, iota=cfg.iota_embed)
 
-    def server_decode(server, x, caches, cur_pos):
-        positions = jnp.asarray(cur_pos)[None]
+    def _decode_tail(server, x, caches, cur_pos, positions):
         if "pos_embed" in server:
             pos_table = server["pos_embed"]
             pe = jnp.take(pos_table,
@@ -326,6 +334,18 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
         logits = shard_constraint(logits, ("batch", None, "vocab_act"))
         return logits, new_caches
 
+    def server_decode(server, x, caches, cur_pos):
+        return _decode_tail(server, x, caches, cur_pos,
+                            jnp.asarray(cur_pos)[None])
+
+    def server_prefill(server, x, caches, t0):
+        """x (bs, chunk, d): one party's whole span upload, consumed in a
+        single compiled pass — same post-embedding ops as ``server_decode``
+        per position, so chunked and per-token prefill agree token-for-
+        token (float reassociation only on the recurrent-state families)."""
+        positions = jnp.asarray(t0) + jnp.arange(x.shape[1])
+        return _decode_tail(server, x, caches, t0, positions)
+
     def cache_specs(batch, max_seq):
         return model_api.build_cache_specs(cfg, batch, max_seq)
 
@@ -339,6 +359,7 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
         row_mask=row_mask if active_rows else None,
         client_embed=client_embed,
         server_decode=server_decode,
+        server_prefill=server_prefill,
         cache_specs=cache_specs,
     )
 

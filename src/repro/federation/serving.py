@@ -1,27 +1,43 @@
 """The serve plane: split inference with the training party split.
 
-Training never merges the parties — and neither does serving. Per decoded
-position the OWNING client party (position ``t`` belongs to client
-``t // span``, the same span split the training adapter uses) embeds the
-current token on its own parameters and uploads one ``(batch, d_model)``
-embedding; the server holds the backbone, head and every KV/SSM cache,
-and returns only sampled token ids. Logits, caches and activations never
-cross the wire, and every step's uplink/downlink lands in the session's
-:class:`repro.core.privacy.Ledger` through the ``Transport`` — serve-time
-traffic is accounted exactly like training rounds.
+Training never merges the parties — and neither does serving. The OWNING
+client party (position ``t`` belongs to client ``t // span``, the same
+span split the training adapter uses) embeds tokens on its own
+parameters and uploads embeddings; the server holds the backbone, head
+and every KV/SSM cache, and returns only sampled token ids. Logits,
+caches and activations never cross the wire, and every step's
+uplink/downlink lands in the session's :class:`repro.core.privacy.Ledger`
+through the ``Transport`` — serve-time traffic is accounted exactly like
+training rounds.
 
-The loop below mirrors ``launch/serve.py``'s prefill-as-decode schedule
-op for op (same sampling keys, same clamp), so split decode is
-bitwise-identical to global decode on replicated client tables — the
-serve-plane analogue of ``global_loss == model.loss_fn`` on the training
-plane.
+Throughput comes from three compiled layers (the per-token,
+Python-dispatched loop of the first serve plane survives only as the
+fallback/oracle):
+
+* **scan decode** — the whole generation is ONE ``jax.lax.scan``: tokens
+  are sampled on device inside the scan body (``fold_in`` keys per step,
+  same stream as the eager loop), accumulated on device, and transferred
+  to the host once at the end. Bitwise-equal to the per-token loop —
+  which stays bitwise-equal to global decode.
+* **chunked prefill** — each owning client embeds its WHOLE span of the
+  prompt in one ``client_embed`` call and the server consumes the
+  ``(B, chunk, d_model)`` upload through the adapter's ``server_prefill``
+  hook (one compiled pass per span instead of one dispatch per token).
+  Adapters without the hook fall back to the step loop.
+* **AOT compile separation** — every program is lowered + compiled
+  explicitly (memoized in ``_AOT_CACHE``), so ``prefill_s``/``decode_s``
+  time pure execution and ``compile_s`` reports compilation honestly
+  (the bench warm-up keys off this).
+
+Continuous batching over these pieces lives in
+:mod:`repro.federation.scheduler`.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +54,9 @@ class ServeResult:
     logits: jnp.ndarray             # final-step logits (B, 1, vocab) —
                                     # server-side state, exposed for tests
     ledger: Ledger
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
+    prefill_s: float = 0.0          # pure execution (outputs blocked on)
+    decode_s: float = 0.0           # pure execution (outputs blocked on)
+    compile_s: float = 0.0          # AOT compilation, reported separately
 
     @property
     def wire_bytes(self) -> int:
@@ -49,6 +66,56 @@ class ServeResult:
     def transmits_gradients(self) -> bool:
         return self.ledger.transmits_gradients
 
+
+# ============================================== compiled-program cache =====
+
+# AOT executables memoized on (jitted fn, argument signature): timing must
+# report compile separately from run, and jit's internal cache would fold
+# the first compile into the first timed call. Keyed on abstract shapes so
+# a serving loop (or the continuous scheduler) reuses executables across
+# requests exactly like the old lru-cached jit did. LRU-bounded: a
+# long-lived server cycling through many (prompt_len, gen_len) signatures
+# must not accumulate executables forever.
+_AOT_CACHE: Dict = {}
+_AOT_CACHE_MAX = 256
+
+
+def _sig(args) -> Tuple:
+    leaves, treedef = jax.tree.flatten(args)
+    out = []
+    for leaf in leaves:
+        if isinstance(leaf, (bool, int, float)):
+            out.append(type(leaf).__name__)
+        else:
+            out.append((tuple(leaf.shape), str(leaf.dtype)))
+    return treedef, tuple(out)
+
+
+def compiled_with_timing(jitted, *args):
+    """(compiled_executable, compile_seconds) — 0.0 on a cache hit."""
+    key = (jitted, _sig(args))
+    hit = _AOT_CACHE.pop(key, None)
+    if hit is not None:
+        _AOT_CACHE[key] = hit          # refresh recency: dict order is the
+        return hit, 0.0                # LRU list, eviction takes the front
+    t0 = time.perf_counter()
+    compiled = jitted.lower(*args).compile()
+    dt = time.perf_counter() - t0
+    while len(_AOT_CACHE) >= _AOT_CACHE_MAX:
+        del _AOT_CACHE[next(iter(_AOT_CACHE))]
+    _AOT_CACHE[key] = compiled
+    return compiled, dt
+
+
+def _require_serve_plane(adapter: ModelAdapter):
+    if adapter.client_embed is None or adapter.server_decode is None:
+        raise ValueError(
+            f"adapter {adapter.name!r} has no serve plane (client_embed/"
+            "server_decode hooks); build the session from a ModelConfig "
+            "to serve split inference")
+
+
+# ===================================================== compiled steps ======
 
 @functools.lru_cache(maxsize=32)
 def make_serve_step(adapter: ModelAdapter, n_clients: int, seq_len: int):
@@ -63,11 +130,7 @@ def make_serve_step(adapter: ModelAdapter, n_clients: int, seq_len: int):
     instead of retracing the backbone every call (adapters are frozen
     value objects and the adapter factories are themselves cached, so
     equal configs hit)."""
-    if adapter.client_embed is None or adapter.server_decode is None:
-        raise ValueError(
-            f"adapter {adapter.name!r} has no serve plane (client_embed/"
-            "server_decode hooks); build the session from a ModelConfig "
-            "to serve split inference")
+    _require_serve_plane(adapter)
     span = seq_len // n_clients
 
     def step(params, tok, caches, t):
@@ -81,12 +144,115 @@ def make_serve_step(adapter: ModelAdapter, n_clients: int, seq_len: int):
     return jax.jit(step, donate_argnums=(2,))
 
 
+@functools.lru_cache(maxsize=32)
+def make_prefill_chunk(adapter: ModelAdapter, n_clients: int, seq_len: int):
+    """Jitted chunked-prefill step: client ``m`` embeds its whole
+    ``(B, chunk)`` span slice in ONE call and the server consumes the
+    ``(B, chunk, d_model)`` upload through ``server_prefill``. Returns
+    only the last position's logits (the decode seed); one compile per
+    distinct chunk length."""
+    _require_serve_plane(adapter)
+    if adapter.server_prefill is None:
+        raise ValueError(
+            f"adapter {adapter.name!r} has no server_prefill hook; use the "
+            "per-token step loop")
+
+    def chunk(params, toks, caches, t0, m):
+        client_m = jax.tree.map(lambda a: a[m], params["clients"])
+        e = adapter.client_embed(client_m, toks)
+        logits, caches = adapter.server_prefill(params["server"], e, caches,
+                                                t0)
+        return logits[:, -1:], caches
+
+    return jax.jit(chunk, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=64)
+def make_decode_scan(adapter: ModelAdapter, n_clients: int, seq_len: int,
+                     prompt_len: int, gen_len: int, temperature: float,
+                     vocab_size: int):
+    """The whole generation as ONE compiled ``lax.scan``.
+
+    Per step the body samples on device from the carried logits (same
+    ``fold_in(key, 100 + t)`` stream and clamp as the eager loop — the
+    paths are bitwise-interchangeable), hands the token to the owning
+    client, and steps the server. Sampled tokens are scan outputs, so the
+    host sees ONE (B, gen_len) transfer at the end instead of gen_len
+    per-token syncs."""
+    _require_serve_plane(adapter)
+    span = seq_len // n_clients
+
+    def run(params, logits0, caches, key):
+        def body(carry, t):
+            logits, caches = carry
+            nxt = sample_token(logits, key, t, temperature, vocab_size)
+            m = t // span
+            client_m = jax.tree.map(lambda a: a[m], params["clients"])
+            e = adapter.client_embed(client_m, nxt[:, None])
+            logits, caches = adapter.server_decode(params["server"], e,
+                                                   caches, t)
+            return (logits, caches), nxt
+
+        (logits, caches), toks = jax.lax.scan(
+            body, (logits0, caches),
+            jnp.arange(prompt_len, prompt_len + gen_len))
+        return toks.T, logits, caches               # (gen_len, B) -> (B, T)
+
+    return jax.jit(run, donate_argnums=(2,))
+
+
+def prefill_plan(prompt_len: int, span: int) -> List[Tuple[int, int, int]]:
+    """Span-aligned chunk schedule ``[(t0, t1, owner_m)]`` covering the
+    prompt: each chunk lies inside exactly one client party's span, so
+    one party embeds it in one call."""
+    plan = []
+    t0 = 0
+    while t0 < prompt_len:
+        m = t0 // span
+        t1 = min((m + 1) * span, prompt_len)
+        plan.append((t0, t1, m))
+        t0 = t1
+    return plan
+
+
+def zero_caches(adapter: ModelAdapter, batch: int, max_seq: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        adapter.cache_specs(batch, max_seq),
+        is_leaf=lambda x: hasattr(x, "logical"))
+
+
+def sample_token(logits, key, t, temperature, vocab_size):
+    """THE serve-plane sampler: greedy, or categorical on the
+    ``fold_in(key, 100 + t)`` stream. Pure jnp, so the eager fallback
+    loop, the decode-scan body and the continuous scheduler's slot step
+    all call this one function — the bitwise solo == scan == continuous
+    guarantee hangs on there being exactly one implementation.
+    ``temperature`` must be a static Python float; ``t`` may be traced."""
+    lg = logits[:, -1].astype(jnp.float32)
+    if temperature > 0:
+        nxt = jax.random.categorical(
+            jax.random.fold_in(key, 100 + t), lg / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(lg, axis=-1)
+    return jnp.minimum(nxt, vocab_size - 1).astype(jnp.int32)
+
+
+# ============================================================ run_decode ===
+
 def run_decode(adapter: ModelAdapter, transport, *, n_clients: int,
                seq_len: int, embed_dim: int, vocab_size: int, params,
                prompts, gen_len: int, temperature: float = 0.0,
-               key=None, ledger: Optional[Ledger] = None) -> ServeResult:
-    """Prefill + decode through the split serve step (the
-    ``Federation.decode`` engine)."""
+               key=None, ledger: Optional[Ledger] = None,
+               use_scan: bool = True,
+               chunked_prefill: bool = True) -> ServeResult:
+    """Prefill + decode through the split serve plane (the
+    ``Federation.decode`` engine).
+
+    ``use_scan=False`` / ``chunked_prefill=False`` select the per-token
+    step loop (the equivalence oracle; the fallback loop still keeps
+    sampled tokens on device and transfers once at the end)."""
+    prompts = jnp.asarray(prompts, jnp.int32)
     B, prompt_len = prompts.shape
     max_seq = prompt_len + gen_len
     if max_seq > seq_len:
@@ -95,37 +261,68 @@ def run_decode(adapter: ModelAdapter, transport, *, n_clients: int,
             f"seq_len {seq_len} (the party span split is sized to it)")
     if key is None:
         key = jax.random.key(0)
+    span = seq_len // n_clients
     step = make_serve_step(adapter, n_clients, seq_len)
-    caches = jax.tree.map(
-        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
-        adapter.cache_specs(B, max_seq),
-        is_leaf=lambda x: hasattr(x, "logical"))
+    caches = zero_caches(adapter, B, max_seq)
+    compile_s = 0.0
+    chunked = chunked_prefill and adapter.server_prefill is not None
 
-    t0 = time.time()
-    logits = None
-    for t in range(prompt_len):
-        logits, caches = step(params, prompts[:, t:t + 1], caches, t)
-    prefill_s = time.time() - t0
+    # ------------------------------------------------------- prefill ----
+    if chunked:
+        chunk_fn = make_prefill_chunk(adapter, n_clients, seq_len)
+        plan = prefill_plan(prompt_len, span)
+        progs = []
+        for t0, t1, m in plan:
+            prog, dt = compiled_with_timing(
+                chunk_fn, params, prompts[:, t0:t1], caches, t0, m)
+            compile_s += dt
+            progs.append(prog)
+        tic = time.perf_counter()
+        logits = None
+        for (t0, t1, m), prog in zip(plan, progs):
+            logits, caches = prog(params, prompts[:, t0:t1], caches, t0, m)
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - tic
+    else:
+        cstep, dt = compiled_with_timing(step, params, prompts[:, :1],
+                                         caches, 0)
+        compile_s += dt
+        tic = time.perf_counter()
+        logits = None
+        for t in range(prompt_len):
+            logits, caches = cstep(params, prompts[:, t:t + 1], caches, t)
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - tic
 
-    out_tokens = []
-    t0 = time.time()
-    for t in range(prompt_len, max_seq):
-        lg = logits[:, -1].astype(jnp.float32)
-        if temperature > 0:
-            nxt = jax.random.categorical(
-                jax.random.fold_in(key, 100 + t), lg / temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(lg, axis=-1)
-        nxt = jnp.minimum(nxt, vocab_size - 1).astype(jnp.int32)
-        out_tokens.append(np.asarray(nxt))
-        logits, caches = step(params, nxt[:, None], caches, t)
-    decode_s = time.time() - t0
+    # -------------------------------------------------------- decode ----
+    if use_scan:
+        scan_fn = make_decode_scan(adapter, n_clients, seq_len, prompt_len,
+                                   gen_len, float(temperature), vocab_size)
+        prog, dt = compiled_with_timing(scan_fn, params, logits, caches, key)
+        compile_s += dt
+        tic = time.perf_counter()
+        toks_dev, logits, caches = prog(params, logits, caches, key)
+        out_tokens = np.asarray(jax.block_until_ready(toks_dev))
+        decode_s = time.perf_counter() - tic
+    else:
+        cstep, dt = compiled_with_timing(step, params, prompts[:, :1],
+                                         caches, prompt_len)
+        compile_s += dt
+        out = []
+        tic = time.perf_counter()
+        for t in range(prompt_len, max_seq):
+            nxt = sample_token(logits, key, t, temperature, vocab_size)
+            out.append(nxt)        # stays on device; one transfer at the end
+            logits, caches = cstep(params, nxt[:, None], caches, t)
+        out_tokens = np.asarray(
+            jax.block_until_ready(jnp.stack(out, axis=1)))
+        decode_s = time.perf_counter() - tic
 
     # every decode call uploads one embedding; only the gen_len sampled
     # tokens cross back down (the clients already hold the prompt)
     ledger = transport.account_serve(batch=B, embed=embed_dim,
                                      n_steps=max_seq, n_gen=gen_len,
                                      ledger=ledger)
-    return ServeResult(tokens=np.stack(out_tokens, axis=1), logits=logits,
+    return ServeResult(tokens=out_tokens, logits=logits,
                        ledger=ledger, prefill_s=prefill_s,
-                       decode_s=decode_s)
+                       decode_s=decode_s, compile_s=compile_s)

@@ -251,7 +251,8 @@ class Federation:
 
     def decode(self, params, prompts, *, gen_len: int,
                temperature: float = 0.0, seed: int = 0, key=None,
-               ledger: Optional[Ledger] = None) -> serving.ServeResult:
+               ledger: Optional[Ledger] = None, use_scan: bool = True,
+               chunked_prefill: bool = True) -> serving.ServeResult:
         """Split inference with the training party split.
 
         ``params`` may be the engine layout or a global ``build_model``
@@ -260,7 +261,12 @@ class Federation:
         ``prompt_len + gen_len`` must fit the session ``seq_len`` (the
         span split is sized to it). Serve-time wire traffic is logged
         through the Transport — pass ``ledger`` to extend a training
-        run's totals instead of starting a fresh one."""
+        run's totals instead of starting a fresh one.
+
+        Decode runs as one compiled ``lax.scan`` (on-device sampling, one
+        host transfer) over a chunk-prefilled cache by default;
+        ``use_scan=False`` / ``chunked_prefill=False`` select the
+        per-token oracle loops."""
         if self.model_cfg is None:
             raise ValueError(
                 "decode needs a ModelConfig-built session (tabular/adapter "
@@ -274,7 +280,31 @@ class Federation:
             seq_len=self.seq_len, embed_dim=self.model_cfg.d_model,
             vocab_size=self.model_cfg.vocab_size, params=params,
             prompts=prompts, gen_len=gen_len, temperature=temperature,
-            key=key, ledger=ledger)
+            key=key, ledger=ledger, use_scan=use_scan,
+            chunked_prefill=chunked_prefill)
+
+    def serve(self, params, *, max_batch: int = 4,
+              temperature: float = 0.0):
+        """A continuous-batching serve session over the split plane.
+
+        Returns a :class:`repro.federation.scheduler.ServeScheduler`:
+        ``submit(prompt, gen_len=...)`` queues requests, ``run()`` drains
+        them through ``max_batch`` fixed slots — new requests are admitted
+        as slots free up mid-flight, one compiled step serves the churning
+        mix, and each request gets its own exact wire ledger."""
+        from repro.federation.scheduler import ServeScheduler
+        if self.model_cfg is None:
+            raise ValueError(
+                "serve needs a ModelConfig-built session (tabular/adapter "
+                "sessions have no serve plane)")
+        if not is_engine_layout(params):
+            params = self.params_from_global(params)
+        return ServeScheduler(
+            self.adapter, self.transport, params=params,
+            n_clients=self.n_clients, seq_len=self.seq_len,
+            embed_dim=self.model_cfg.d_model,
+            vocab_size=self.model_cfg.vocab_size, max_batch=max_batch,
+            temperature=temperature)
 
     # ------------------------------------------------- checkpoint plane ---
     def save(self, path: str, params, *, step: int = 0,

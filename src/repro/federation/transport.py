@@ -105,6 +105,17 @@ class Transport:
         ledger.messages.extend(serve_messages(batch, embed) * n_gen)
         return ledger
 
+    def account_serve_step(self, *, batch: int, embed: int,
+                           gen: bool = True,
+                           ledger: Optional[Ledger] = None) -> Ledger:
+        """One split-inference step for one request: the continuous
+        scheduler's metering grain. Logging per ACTIVE slot per step keeps
+        every request's ledger exact under slot churn — a request's total
+        is identical to what a solo :func:`serving.run_decode` of the same
+        request would log."""
+        return self.account_serve(batch=batch, embed=embed, n_steps=1,
+                                  n_gen=1 if gen else 0, ledger=ledger)
+
     def releases(self, *, n_rounds: int, n_clients: int = 1,
                  zoo_queries: int = 1) -> int:
         """Gaussian-mechanism releases in a run: each activated client

@@ -44,15 +44,26 @@ def _splittable(cfg) -> bool:
 
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 16,
           gen_len: int = 16, use_reduced: bool = True, seed: int = 0,
-          temperature: float = 0.0, n_clients: int = 0) -> dict:
+          temperature: float = 0.0, n_clients: int = 0,
+          continuous: bool = False, max_batch: int = 4) -> dict:
     """``n_clients >= 1`` routes through the session's split serve plane
     (falling back to the global path for families that cannot split);
     ``n_clients=0`` is the pre-session global decode, bit-identical to
-    the split path on replicated client tables."""
+    the split path on replicated client tables. ``continuous=True``
+    serves ``batch`` independent requests through the continuous-batching
+    scheduler (``fed.serve``) over ``max_batch`` slots instead of one
+    fused batch."""
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg, remat=False)
     if n_clients and _splittable(cfg):
+        if continuous:
+            return _serve_continuous(arch, cfg, batch=batch,
+                                     prompt_len=prompt_len,
+                                     gen_len=gen_len, seed=seed,
+                                     temperature=temperature,
+                                     n_clients=n_clients,
+                                     max_batch=max_batch)
         return _serve_federated(arch, cfg, batch=batch,
                                 prompt_len=prompt_len, gen_len=gen_len,
                                 seed=seed, temperature=temperature,
@@ -67,18 +78,25 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 16,
 
 # ------------------------------------------------- split (session) path ---
 
-def _serve_federated(arch: str, cfg, *, batch: int, prompt_len: int,
-                     gen_len: int, seed: int, temperature: float,
-                     n_clients: int) -> dict:
+def _build_session(cfg, *, n_clients: int, prompt_len: int, gen_len: int,
+                   seed: int):
+    """(fed, key, params) for a serving run — the party span split is
+    rounded up to cover the full served window."""
     from repro.federation import Federation
-
-    # the party span split covers the full served window
     max_seq = prompt_len + gen_len
     seq_len = -(-max_seq // n_clients) * n_clients
     fed = Federation.build(cfg, n_clients=n_clients, seq_len=seq_len)
     key = jax.random.key(seed)
     params = common.materialize(fed.model.param_specs, key)
+    return fed, key, params
 
+
+def _serve_federated(arch: str, cfg, *, batch: int, prompt_len: int,
+                     gen_len: int, seed: int, temperature: float,
+                     n_clients: int) -> dict:
+    fed, key, params = _build_session(cfg, n_clients=n_clients,
+                                      prompt_len=prompt_len,
+                                      gen_len=gen_len, seed=seed)
     toks = jax.random.randint(jax.random.fold_in(key, 1),
                               (batch, prompt_len), 0, cfg.vocab_size)
     res = fed.decode(params, toks, gen_len=gen_len,
@@ -91,11 +109,42 @@ def _serve_federated(arch: str, cfg, *, batch: int, prompt_len: int,
         "clients": n_clients,
         "prompt_len": prompt_len, "gen_len": gen_len,
         "prefill_s": round(res.prefill_s, 2),
+        "compile_s": round(res.compile_s, 2),
         "decode_tok_per_s": round(batch * gen_len
                                   / max(res.decode_s, 1e-9), 1),
         "wire_bytes": res.wire_bytes,
         "wire_has_gradients": res.transmits_gradients,
         "sample_output": gen[0, :8].tolist(),
+    }
+
+
+# ------------------------------------------- continuous-batching path ---
+
+def _serve_continuous(arch: str, cfg, *, batch: int, prompt_len: int,
+                      gen_len: int, seed: int, temperature: float,
+                      n_clients: int, max_batch: int) -> dict:
+    fed, key, params = _build_session(cfg, n_clients=n_clients,
+                                      prompt_len=prompt_len,
+                                      gen_len=gen_len, seed=seed)
+    srv = fed.serve(params, max_batch=max_batch, temperature=temperature)
+    for i in range(batch):
+        toks = jax.random.randint(jax.random.fold_in(key, 1000 + i),
+                                  (prompt_len,), 0, cfg.vocab_size)
+        srv.submit(np.asarray(toks), gen_len, key=jax.random.fold_in(key, i))
+    results = srv.run()
+    assert len(results) == batch
+    total_tokens = sum(r.tokens.size for r in results)
+    return {
+        "arch": arch, "batch": batch, "mode": "continuous",
+        "clients": n_clients, "slots": max_batch,
+        "prompt_len": prompt_len, "gen_len": gen_len,
+        "steps": srv.steps,
+        "compile_s": round(srv.compile_s, 2),
+        "decode_tok_per_s": round(total_tokens / max(srv.last_run_s, 1e-9),
+                                  1),
+        "wire_bytes": sum(r.wire_bytes for r in results),
+        "wire_has_gradients": any(r.transmits_gradients for r in results),
+        "sample_output": results[0].tokens[:8].tolist(),
     }
 
 
@@ -167,12 +216,17 @@ def main():
     ap.add_argument("--reduced", action="store_true", default=True)
     # 0 = the pre-session global path; >=1 serves split via fed.decode
     ap.add_argument("--clients", type=int, default=2)
+    # continuous batching: drain --batch requests through --max-batch slots
+    ap.add_argument("--continuous", action="store_true")
+    ap.add_argument("--max-batch", type=int, default=4)
     args = ap.parse_args()
     print(json.dumps(serve(args.arch, batch=args.batch,
                            prompt_len=args.prompt_len, gen_len=args.gen_len,
                            temperature=args.temperature,
                            use_reduced=args.reduced,
-                           n_clients=args.clients), indent=2))
+                           n_clients=args.clients,
+                           continuous=args.continuous,
+                           max_batch=args.max_batch), indent=2))
 
 
 if __name__ == "__main__":

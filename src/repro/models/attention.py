@@ -203,9 +203,18 @@ def attention_apply(cfg, p, x, *, positions, cache=None, cur_pos=None,
             cache["k"], k.astype(cache["k"].dtype), cur_pos, axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(
             cache["v"], v.astype(cache["v"].dtype), cur_pos, axis=1)
-        o = decode_attend(q, k_cache, v_cache, cur_pos, window=window,
-                          logit_softcap=cfg.attn_logit_softcap,
-                          window_gather=window_gather)
+        if S == 1:
+            o = decode_attend(q, k_cache, v_cache, cur_pos, window=window,
+                              logit_softcap=cfg.attn_logit_softcap,
+                              window_gather=window_gather)
+        else:
+            # chunked prefill: the whole S-token chunk attends causally
+            # over the updated cache in one pass. The causal mask offset
+            # by cur_pos hides both the future and the not-yet-written
+            # (zero) cache slots past cur_pos + S.
+            o = mha_chunked(q, k_cache, v_cache, causal=True, window=window,
+                            logit_softcap=cfg.attn_logit_softcap,
+                            q_offset=cur_pos)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
         o = mha_chunked(q, k, v, causal=causal and kv_override is None,
@@ -296,7 +305,14 @@ def mla_apply(cfg, p, x, *, positions, cache=None, cur_pos=None,
         new_cache = {"latent": lat_cache}
         lat = lat_cache[..., :cfg.kv_lora_rank].astype(dt)
         kr = lat_cache[..., cfg.kv_lora_rank:].astype(dt)
-        if cfg.mla_absorb:
+        if S > 1:
+            # chunked prefill: expand the latent cache once and run the
+            # whole chunk causally against it (absorption is a per-token
+            # decode optimization; chunks amortize the expansion anyway)
+            k, v = _mla_expand(cfg, p, lat, kr, dt)
+            o = mha_chunked(q, k, v, causal=True, window=window,
+                            scale=scale, q_offset=cur_pos)
+        elif cfg.mla_absorb:
             o = _mla_absorbed_decode(cfg, p, q_nope, q_rope, lat, kr,
                                      cur_pos, window=window, scale=scale)
         else:

@@ -107,3 +107,16 @@ def stack_layer_specs(layer_tree, n_layers: int, axis_name: str = "layers"):
         return ParamSpec((n_layers,) + tuple(s.shape), s.dtype,
                          (axis_name,) + tuple(logical), s.init, s.scale)
     return jax.tree.map(one, layer_tree, is_leaf=is_spec)
+
+
+def chunk_divisor(seq: int, cap: int) -> int:
+    """Largest chunk length <= ``cap`` that divides ``seq`` exactly.
+
+    The chunked recurrent forms (wkv6 / SSD) scan over fixed-size chunks
+    and require the sequence to tile evenly; prefill chunks arrive at
+    arbitrary span lengths, so pick the best even tiling (worst case 1,
+    which degenerates to the exact per-token recurrence)."""
+    for c in range(min(cap, seq), 1, -1):
+        if seq % c == 0:
+            return c
+    return 1

@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models import common
 from repro.models.common import ParamSpec
 from repro.sharding.rules import shard_constraint
 
@@ -170,6 +171,16 @@ def rwkv_time_mix(cfg, p, x, *, state=None):
     if state is None:
         y, _ = wkv6_chunked(r4, k, v, w, u, cfg.rwkv_chunk)
         new_state = None
+    elif S > 1:
+        # chunked prefill with carried state: the same chunked form as
+        # training, seeded from the decode state (wkv6_chunked threads
+        # state0 across chunks). Chunk length must tile S and stay small
+        # enough for the mid-point exp factoring (see clamp above).
+        c = common.chunk_divisor(S, cfg.rwkv_chunk)
+        y, S1 = wkv6_chunked(r4, k, v, w, u, c,
+                             state0=state["wkv"].astype(jnp.float32))
+        new_state = {"wkv": S1.astype(state["wkv"].dtype),
+                     "shift": x[:, -1].astype(state["shift"].dtype)}
     else:
         S0 = state["wkv"].astype(jnp.float32)
         k0 = k[:, 0].astype(jnp.float32)

@@ -19,6 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models import common
 from repro.models.common import ParamSpec
 from repro.sharding.rules import shard_constraint
 
@@ -61,6 +62,12 @@ def _causal_conv(x, w, tail=None):
     xp = jnp.concatenate([pad, x], axis=1)
     out = sum(xp[:, i:i + S] * w[i] for i in range(CONV_W))
     new_tail = xp[:, S:]                                  # last W-1 inputs
+    if tail is not None:
+        # keep the carried state in its spec dtype: the values are already
+        # rounded to x.dtype, so the widening store is exact — and a
+        # decode step's cache signature stays stable call over call
+        # (the serve plane compiles its steps ahead of time)
+        new_tail = new_tail.astype(tail.dtype)
     return out, new_tail
 
 
@@ -172,6 +179,13 @@ def ssm_apply(cfg, p, x, *, state=None):
     if state is None:
         y, _ = _ssd_chunked(xh, a, dt, Bm, Cm, cfg.ssm_chunk)
         new_state = None
+    elif S > 1:
+        # chunked prefill with carried state: the training-time SSD form
+        # seeded from the decode state (_ssd_chunked threads state0).
+        c = common.chunk_divisor(S, cfg.ssm_chunk)
+        y, s1 = _ssd_chunked(xh, a, dt, Bm, Cm, c,
+                             state0=state["ssm"].astype(jnp.float32))
+        new_state = {"ssm": s1.astype(state["ssm"].dtype), "conv": new_tail}
     else:
         s0 = state["ssm"].astype(jnp.float32)             # (B,H,P,N)
         s1 = (s0 * a[:, 0, :, None, None]

@@ -313,7 +313,10 @@ def forward(cfg, params, inputs, *, caches=None, cur_pos=None, window=0,
             S += cfg.n_vision_tokens
         positions = jnp.arange(S)
     else:
-        positions = jnp.asarray(cur_pos)[None]          # (1,)
+        # decode positions: cur_pos for the classic one-token step, or a
+        # cur_pos-offset run for a multi-token chunk (chunked prefill)
+        positions = jnp.asarray(cur_pos) + jnp.arange(
+            inputs["tokens"].shape[1])                  # (S,)
     x = embed_inputs(cfg, params, inputs, positions=positions)
     h, new_caches, aux = backbone_apply(
         cfg, params, x, positions=positions, caches=caches, cur_pos=cur_pos,
