@@ -11,13 +11,19 @@ split party plane (clients embed, server owns backbone + caches):
 * ``batched``      — all requests as ONE (B, ·) batch through the fused
   engine: one embedding upload per step amortizes the uplink across the
   whole batch (the communication-efficiency lever of DPZV-style VFL).
-* ``continuous``   — the ``ServeScheduler``: half as many slots as
-  requests, admissions mid-flight, per-request ledgers.
+* ``continuous``   — the ``ServeScheduler`` (paged caches, block-scan
+  stepping, wave admission/retirement) at matched slot width: engine
+  overhead vs the static batch, apples to apples.
+* ``continuous_churn`` — the same scheduler with half as many slots as
+  requests: two admission waves, retirement + re-admission mid-drain
+  (the price of actually churning).
 
 Every path is warmed up before timing (compile is reported separately by
-the engine and excluded here), and the bench verifies the guarantees the
-speed must not cost: split decode stays bitwise-equal to global decode,
-and per-request wire totals are identical across all four paths.
+the engine and excluded here) and timed best-of-3 — the toy drains are
+millisecond-scale, so a single timing is scheduler-jitter-bound and the
+mode ratios swing ±50% run to run. The bench verifies the guarantees
+the speed must not cost: split decode stays bitwise-equal to global
+decode, and per-request wire totals are identical across all paths.
 
 Emits ``BENCH_serve.json`` (tokens/s per mode, uplink bytes per token,
 speedups, invariant checks) — the serve-perf trajectory record.
@@ -107,6 +113,16 @@ def bench_serve_throughput(fast: bool = True, row=None, out=DEFAULT_OUT):
     tokens_per_s = {}
     uplink_per_token = {}
 
+    REPS = 3          # best-of: drains are ms-scale, single timings jitter
+
+    def timed_best(fn):
+        best, out = float("inf"), None
+        for _ in range(REPS):
+            tic = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - tic)
+        return best, out
+
     def record(name, seconds, ledgers, tokens):
         tokens_per_s[name] = tokens / max(seconds, 1e-9)
         up = sum(l.bytes_by_kind().get("embedding", 0) for l in ledgers)
@@ -118,52 +134,63 @@ def bench_serve_throughput(fast: bool = True, row=None, out=DEFAULT_OUT):
 
     # ------------------------------------------------ seed baseline -----
     from repro.core.privacy import Ledger
+    def seed_drain():
+        toks, leds = [], []
+        for i in range(n_req):
+            toks.append(_seed_single_decode(
+                fed, params, jnp.asarray(prompts[i:i + 1]), GL,
+                cfg.vocab_size))
+            leds.append(fed.transport.account_serve(
+                batch=1, embed=cfg.d_model, n_steps=PL + GL, n_gen=GL,
+                ledger=Ledger()))
+        return toks, leds
     _seed_single_decode(fed, params, jnp.asarray(prompts[:1]), GL,
                         cfg.vocab_size)                        # warm-up
-    tic = time.perf_counter()
-    seed_tokens = []
-    seed_ledgers = []
-    for i in range(n_req):
-        seed_tokens.append(_seed_single_decode(
-            fed, params, jnp.asarray(prompts[i:i + 1]), GL,
-            cfg.vocab_size))
-        led = fed.transport.account_serve(batch=1, embed=cfg.d_model,
-                                          n_steps=PL + GL, n_gen=GL,
-                                          ledger=Ledger())
-        seed_ledgers.append(led)
-    record("single_seed", time.perf_counter() - tic, seed_ledgers,
-           total_tokens)
+    dt, (seed_tokens, seed_ledgers) = timed_best(seed_drain)
+    record("single_seed", dt, seed_ledgers, total_tokens)
     seed_tokens = np.concatenate(seed_tokens, axis=0)
 
     # ------------------------------------- fused engine, one at a time --
+    def scan_drain():
+        rs = [fed.decode(params, prompts[i:i + 1], gen_len=GL)
+              for i in range(n_req)]
+        return [r.tokens for r in rs], [r.ledger for r in rs]
     fed.decode(params, prompts[:1], gen_len=GL)                # warm-up
-    tic = time.perf_counter()
-    scan_tokens = []
-    scan_ledgers = []
-    for i in range(n_req):
-        r = fed.decode(params, prompts[i:i + 1], gen_len=GL)
-        scan_tokens.append(r.tokens)
-        scan_ledgers.append(r.ledger)
-    record("single_scan", time.perf_counter() - tic, scan_ledgers,
-           total_tokens)
+    dt, (scan_tokens, scan_ledgers) = timed_best(scan_drain)
+    record("single_scan", dt, scan_ledgers, total_tokens)
     scan_tokens = np.concatenate(scan_tokens, axis=0)
 
     # ------------------------------------------- fused engine, batched --
     fed.decode(params, prompts, gen_len=GL)                    # warm-up
-    tic = time.perf_counter()
-    rb = fed.decode(params, prompts, gen_len=GL)
-    record("batched", time.perf_counter() - tic, [rb.ledger], total_tokens)
+    dt, rb = timed_best(lambda: fed.decode(params, prompts, gen_len=GL))
+    record("batched", dt, [rb.ledger], total_tokens)
 
     # -------------------------------------------- continuous batching ---
-    def run_continuous():
-        srv = fed.serve(params, max_batch=max(1, n_req // 2))
+    # two configs: matched slot width (engine overhead vs the static
+    # batch, apples to apples) and half-width slots (the churn config —
+    # two admission waves, retirement + re-admission mid-drain)
+    def run_continuous(mb, gl=GL):
+        srv = fed.serve(params, max_batch=mb)
         for i in range(n_req):
-            srv.submit(prompts[i], GL)
+            srv.submit(prompts[i], gl)
         return srv, srv.run()
-    run_continuous()                                           # warm-up
-    srv, cres = run_continuous()
+    run_continuous(n_req)                                      # warm-up
+    srv, cres = min((run_continuous(n_req) for _ in range(3)),
+                    key=lambda sc: sc[0].last_run_s)
     record("continuous", srv.last_run_s,
            [r.ledger for r in cres], total_tokens)
+    run_continuous(max(1, n_req // 2))                         # warm-up
+    srv_churn, cres_churn = min(
+        (run_continuous(max(1, n_req // 2)) for _ in range(3)),
+        key=lambda sc: sc[0].last_run_s)
+    record("continuous_churn", srv_churn.last_run_s,
+           [r.ledger for r in cres_churn], total_tokens)
+
+    # ------------------------- paged memory: short requests, same pool --
+    # worst case (above) fills every slot to seq_len; a short-request mix
+    # must leave most of the page pool untouched — peak pages tracks the
+    # lengths actually in flight, not max_batch x seq_len
+    srv_short, _ = run_continuous(max(1, n_req // 2), gl=max(1, GL // 4))
 
     # --------------------------------------------------- invariants -----
     global_tokens = _global_greedy_decode(cfg, model, gp,
@@ -173,12 +200,20 @@ def bench_serve_throughput(fast: bool = True, row=None, out=DEFAULT_OUT):
         np.array_equal(seed_tokens, scan_tokens)
         and np.array_equal(scan_tokens, rb.tokens)
         and all(np.array_equal(r.tokens, scan_tokens[i])
-                for i, r in enumerate(cres)))
+                for i, r in enumerate(cres))
+        and all(np.array_equal(r.tokens, scan_tokens[i])
+                for i, r in enumerate(cres_churn)))
     per_req = seed_ledgers[0].total_bytes
     wire_unchanged = bool(
         all(l.total_bytes == per_req for l in scan_ledgers)
-        and all(r.ledger.total_bytes == per_req for r in cres)
+        and all(r.ledger.total_bytes == per_req
+                for r in list(cres) + list(cres_churn))
         and rb.ledger.total_bytes == n_req * per_req)
+    # continuous per-request ledgers are byte-identical Message sequences
+    # to the solo (single_scan) ledgers, not just equal totals
+    ledgers_exact = bool(all(
+        r.ledger.messages == scan_ledgers[i].messages
+        for rs in (cres, cres_churn) for i, r in enumerate(rs)))
 
     results = {
         "config": {"arch": cfg.arch_id, "d_model": cfg.d_model,
@@ -193,9 +228,30 @@ def bench_serve_throughput(fast: bool = True, row=None, out=DEFAULT_OUT):
             tokens_per_s["batched"] / tokens_per_s["single_seed"], 2),
         "speedup_continuous_vs_seed": round(
             tokens_per_s["continuous"] / tokens_per_s["single_seed"], 2),
+        "continuous_vs_batched_ratio": round(
+            tokens_per_s["batched"] / tokens_per_s["continuous"], 2),
+        "continuous_churn_vs_batched_ratio": round(
+            tokens_per_s["batched"] / tokens_per_s["continuous_churn"], 2),
+        "paged_cache": {
+            "page_size": srv.page_size,
+            "pages_per_seq": srv.pages_per_seq,
+            "full_len": {
+                "slots": srv_churn.max_batch,
+                "worst_case_pages": (srv_churn.max_batch
+                                     * srv_churn.pages_per_seq),
+                "peak_pages": srv_churn.allocator.peak_in_use},
+            "short_mix": {
+                "slots": srv_short.max_batch,
+                "worst_case_pages": (srv_short.max_batch
+                                     * srv_short.pages_per_seq),
+                "peak_pages": srv_short.allocator.peak_in_use},
+            "host_transfers_churn": srv_churn.host_transfers,
+            "decode_steps_churn": srv_churn.steps,
+        },
         "split_equals_global": split_equals_global,
         "all_paths_same_tokens": paths_agree,
         "wire_per_request_unchanged": wire_unchanged,
+        "continuous_ledgers_byte_identical": ledgers_exact,
     }
     with open(out, "w") as f:
         json.dump(results, f, indent=2)

@@ -68,6 +68,12 @@ class ModelAdapter:
       the serve engine falls back to the per-token step loop for
       adapters that leave it ``None``.
     * ``cache_specs(batch, max_seq)``     -> decode-state spec tree.
+    * ``server_decode_paged(server, x, caches, tables, cur_pos, active,
+      page_size)`` -> (logits, caches): the continuous scheduler's
+      batched paged decode step — x is (n_slots, 1, d) uploads, caches
+      carry sequence leaves as shared page pools, ``tables`` (n_slots,
+      pages_per_seq) block tables, ``cur_pos``/``active`` per-slot
+      vectors. Optional; without it the scheduler cannot page.
     """
     name: str
     client_forward: Callable
@@ -80,6 +86,7 @@ class ModelAdapter:
     server_decode: Optional[Callable] = None
     server_prefill: Optional[Callable] = None
     cache_specs: Optional[Callable] = None
+    server_decode_paged: Optional[Callable] = None
 
     def init_params(self, key):
         return common.materialize(self.param_specs(), key)
@@ -346,6 +353,31 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
         positions = jnp.asarray(t0) + jnp.arange(x.shape[1])
         return _decode_tail(server, x, caches, t0, positions)
 
+    def server_decode_paged(server, x, caches, tables, cur_pos, active,
+                            page_size):
+        """Batched paged decode: x (n_slots, 1, d) — every slot advances
+        one token at its OWN position. Sequence cache leaves are shared
+        page pools addressed through ``tables``; per-row positions drive
+        RoPE/pos-embed and the attention mask, so each active row
+        computes exactly what the B=1 ``server_decode`` would."""
+        positions = cur_pos[:, None]                       # (n_slots, 1)
+        paging_ctx = common.PageContext(tables=tables, active=active,
+                                        page_size=page_size)
+        if "pos_embed" in server:
+            pos_table = server["pos_embed"]
+            pe = jnp.take(pos_table,
+                          jnp.clip(positions, 0, pos_table.shape[0] - 1),
+                          axis=0)
+            x = x + pe.astype(x.dtype)
+        x = shard_constraint(x, ("batch", None, "embed_act"))
+        h, new_caches, _ = transformer.backbone_apply(
+            cfg, server, x, positions=positions, caches=caches,
+            cur_pos=cur_pos, paging=paging_ctx)
+        h = apply_norm(cfg, server["final_norm"], h)
+        logits = unembed(server["lm_head"], h)
+        logits = shard_constraint(logits, ("batch", None, "vocab_act"))
+        return logits, new_caches
+
     def cache_specs(batch, max_seq):
         return model_api.build_cache_specs(cfg, batch, max_seq)
 
@@ -361,6 +393,7 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
         server_decode=server_decode,
         server_prefill=server_prefill,
         cache_specs=cache_specs,
+        server_decode_paged=server_decode_paged,
     )
 
 

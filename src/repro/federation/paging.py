@@ -1,0 +1,176 @@
+"""Paged slot storage for the continuous-batching serve plane.
+
+The first ServeScheduler stacked one dense ``cache_specs(1, seq_len)``
+tree per slot, so every request paid ``seq_len``-padded cache memory no
+matter how short it was, and peak slot-cache memory was always
+``max_batch × seq_len``. This module rebuilds that storage sglang-style:
+
+* Sequence-indexed cache leaves (attention K/V, the MLA latent — any
+  leaf whose spec carries a ``"cache_seq"`` logical axis) move into ONE
+  shared page pool of shape ``(layers, n_pages, page_size, *tail)``.
+  Requests hold pages, not slots-worth of sequence: a request of total
+  length L holds ``ceil(L / page_size)`` pages, and peak pool usage
+  tracks the *actual* lengths in flight.
+* Recurrent state leaves (SSM state, conv tails, RWKV wkv/shift — leaves
+  with ``"cache_batch"`` but no ``"cache_seq"``) stay slot-stacked:
+  their size is sequence-independent, so there is nothing to page.
+
+Two pool pages are reserved:
+
+* page ``0`` (``ZERO_PAGE``) is read-only zeros. Block-table entries of
+  positions a request never reached point here, so gathers over a slot's
+  full table read exact ``0.0`` beyond its allocation — bitwise-identical
+  to the dense zero caches the paged pool replaces (masked positions
+  contribute exactly ``exp(NEG_INF - max) = 0.0`` to attention either
+  way, so values past ``cur_pos`` never matter; see
+  ``attention.decode_attend``).
+* page ``1`` (``TRASH_PAGE``) absorbs the writes of INACTIVE slots: the
+  batched decode step always scatters a k/v row per slot, and routing
+  retired slots' rows here means a freed page can be handed to the next
+  request without re-zeroing — its stale contents sit beyond the new
+  request's ``cur_pos`` and are masked exactly.
+
+The host-side :class:`PageAllocator` is a plain free list; block tables
+live on the host as ``(max_batch, seq_len // page_size)`` int32 rows and
+ride into the compiled block step as a small device array per call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable, List
+
+import jax
+import numpy as np
+
+from repro.models.common import ParamSpec
+
+ZERO_PAGE = 0
+TRASH_PAGE = 1
+N_RESERVED = 2
+
+
+def default_page_size(seq_len: int, cap: int = 8) -> int:
+    """Largest page size <= ``cap`` that divides ``seq_len`` exactly.
+
+    ``page_size`` must tile ``seq_len`` so a full block table gathers
+    exactly ``seq_len`` positions — the same masked extent the dense
+    slot caches exposed, which is what keeps the paged decode
+    bitwise-equal to the dense path."""
+    for p in range(min(cap, seq_len), 0, -1):
+        if seq_len % p == 0:
+            return p
+    return 1
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """How one dense cache leaf maps onto paged storage.
+
+    ``pooled`` leaves drop their ``cache_batch`` axis and split their
+    ``cache_seq`` axis into ``(n_pages, page_size)``; state leaves keep
+    their layout with the batch axis widened to the slot count."""
+    pooled: bool
+    batch_axis: int
+    seq_axis: int = -1
+
+
+def leaf_plans(dense_specs):
+    """LeafPlan tree matching ``cache_specs(1, seq_len)`` leaf-for-leaf."""
+
+    def one(s: ParamSpec) -> LeafPlan:
+        logical = s.logical if s.logical else (None,) * len(s.shape)
+        if "cache_batch" not in logical:
+            raise ValueError(
+                f"cache spec leaf {s.shape} has no 'cache_batch' logical "
+                f"axis ({logical}) — cannot slot-stack it")
+        b = logical.index("cache_batch")
+        if "cache_seq" in logical:
+            q = logical.index("cache_seq")
+            if q != b + 1:
+                raise ValueError(
+                    f"pooled leaf expects cache_seq right after "
+                    f"cache_batch, got axes ({b}, {q}) in {logical}")
+            return LeafPlan(pooled=True, batch_axis=b, seq_axis=q)
+        return LeafPlan(pooled=False, batch_axis=b)
+
+    return jax.tree.map(one, dense_specs, is_leaf=_is_spec)
+
+
+def paged_specs(dense_specs, *, n_slots: int, n_pages: int, page_size: int):
+    """Transform ``cache_specs(1, seq_len)`` into the paged layout."""
+    plans = leaf_plans(dense_specs)
+
+    def one(s: ParamSpec, plan: LeafPlan) -> ParamSpec:
+        logical = s.logical if s.logical else (None,) * len(s.shape)
+        if plan.pooled:
+            b, q = plan.batch_axis, plan.seq_axis
+            shape = (s.shape[:b] + (n_pages, page_size) + s.shape[q + 1:])
+            log = (logical[:b] + ("cache_pages", None) + logical[q + 1:])
+        else:
+            b = plan.batch_axis
+            shape = s.shape[:b] + (n_slots,) + s.shape[b + 1:]
+            log = logical
+        return ParamSpec(shape, s.dtype, log, s.init, s.scale)
+
+    return jax.tree.map(one, dense_specs, plans, is_leaf=_is_spec)
+
+
+def install_rows(page_ids: np.ndarray, n_tokens: int,
+                 page_size: int) -> np.ndarray:
+    """Flat pool-row indices for positions ``0 .. n_tokens-1`` of a
+    request holding ``page_ids`` (prefill scatter targets)."""
+    pos = np.arange(n_tokens)
+    return (page_ids[pos // page_size].astype(np.int64) * page_size
+            + pos % page_size).astype(np.int32)
+
+
+class PageAllocator:
+    """Host-side page free list (pages ``N_RESERVED..n_pages-1``).
+
+    Tracks ``peak_in_use`` so the bench/tests can demonstrate that slot
+    cache memory scales with the lengths actually in flight rather than
+    ``max_batch × seq_len``."""
+
+    def __init__(self, n_pages: int):
+        if n_pages <= N_RESERVED:
+            raise ValueError(
+                f"need more than {N_RESERVED} pages (zero + trash are "
+                f"reserved), got n_pages={n_pages}")
+        self.n_pages = n_pages
+        self._free = deque(range(N_RESERVED, n_pages))
+        self.in_use = 0
+        self.peak_in_use = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages - N_RESERVED
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> np.ndarray:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, have {len(self._free)}")
+        ids = np.array([self._free.popleft() for _ in range(n)], np.int32)
+        self.in_use += n
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return ids
+
+    def free_(self, ids: Iterable[int]) -> None:
+        ids = list(int(i) for i in ids)
+        for i in ids:
+            if not N_RESERVED <= i < self.n_pages:
+                raise ValueError(f"freeing invalid page id {i}")
+        self._free.extend(ids)
+        self.in_use -= len(ids)

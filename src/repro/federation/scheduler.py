@@ -1,20 +1,44 @@
-"""Continuous batching for the split serve plane.
+"""Continuous batching for the split serve plane, on paged caches.
 
 The sglang-style serving loop, with the VFL party split kept intact: a
-:class:`ServeScheduler` owns ``max_batch`` fixed SLOTS over slot-indexed
-caches (one leading slot axis over ``cache_specs(1, seq_len)``), admits
-queued requests into free slots mid-flight, and drives the whole churning
-mix with ONE compiled step — the B=1 split serve step vmapped over slots
-with per-slot positions, per-slot sampling keys and an active mask, so
-admissions and retirements never retrace.
+:class:`ServeScheduler` owns ``max_batch`` fixed SLOTS whose
+sequence-indexed cache state lives in a shared page pool
+(:mod:`repro.federation.paging`) addressed through per-slot block
+tables, admits queued requests into free slots mid-flight, and drives
+the whole churning mix with compiled MULTI-STEP decode blocks.
 
-Per admission the new request's prompt is chunk-prefilled into its slot
-(span-aligned ``client_embed`` uploads through ``server_prefill``); per
-decode step every active slot samples on device into a per-slot
-generation buffer (the host fetches a request's tokens ONCE, at
-retirement) and the scheduler logs exactly that slot's wire messages —
-so each request's ledger total is identical to a solo ``fed.decode`` of
-the same request, however the batch around it churned.
+The first scheduler revision lost 6.6× to the static batched path by
+doing host work per token: a Python dispatch per step, a per-active-slot
+ledger call per token, and a blocking device→host fetch inside
+``_retire``. This revision keeps the host out of the loop:
+
+* **block stepping** — ``remaining`` lives on device and derives the
+  active mask, so a compiled ``lax.scan`` block of K steps needs no host
+  intervention. K is the largest power of two that no active request
+  outlives (``K <= min(remaining)``), so a block never overshoots a
+  retirement, the compiled-block set is bounded by ``log2(seq_len)``
+  programs, and an occupied slot is never stepped while logically done.
+* **wave retirement** — after a block, every slot whose host-mirrored
+  ``remaining`` hit zero retires together: ONE batched device→host fetch
+  per wave (``host_transfers`` counts them — O(requests), not O(steps)).
+* **deferred accounting** — prefill wire traffic is logged at admission
+  (``n_steps=prompt_len, n_gen=0``) and generation at retirement
+  (``n_steps=gen_len, n_gen=gen_len``). ``Transport.account_serve``
+  appends ``serve_messages(b, e, with_token=False) * (n_steps - n_gen)``
+  then ``serve_messages(b, e) * n_gen``, so admission + retirement
+  produce exactly ``up×prompt_len`` then ``(up+token)×gen_len`` — the
+  byte-identical Message list a solo ``fed.decode`` logs in its single
+  ``account_serve(n_steps=prompt_len+gen_len, n_gen=gen_len)`` call, and
+  what the per-step ``account_serve_step`` metering used to build one
+  token at a time.
+* **wave admission** — the queue's head run of equal-length prompts is
+  admitted as ONE wave: one batched chunk-prefill and one compiled
+  install scatter cover the whole wave (width-1 waves reuse a persistent
+  dense ``(1, seq_len)`` buffer — only the small recurrent state leaves
+  are re-zeroed; stale KV rows beyond the prompt are masked exactly).
+  Admission issues only async dispatches — no host sync, and admission
+  is page-gated FIFO: an undersized pool makes requests wait for pages,
+  never reorder.
 
 Sampling uses the same ``fold_in(request_key, 100 + t)`` stream as the
 solo path, so a request's tokens do not depend on what shared the batch.
@@ -32,7 +56,7 @@ import numpy as np
 
 from repro.core.adapters import ModelAdapter
 from repro.core.privacy import Ledger
-from repro.federation import serving
+from repro.federation import paging, serving
 
 
 @dataclasses.dataclass
@@ -64,53 +88,110 @@ class RequestResult:
         return self.ledger.transmits_gradients
 
 
-@functools.lru_cache(maxsize=16)
-def make_slot_decode_step(adapter: ModelAdapter, n_clients: int,
-                          seq_len: int, temperature: float,
-                          vocab_size: int):
-    """One continuous-batching decode step, compiled once per slot count.
+@functools.lru_cache(maxsize=64)
+def make_paged_decode_block(adapter: ModelAdapter, n_clients: int,
+                            seq_len: int, temperature: float,
+                            vocab_size: int, page_size: int,
+                            n_slots: int, n_steps: int):
+    """A compiled block of ``n_steps`` continuous-batching decode steps.
 
-    The B=1 serve step (sample → owning client embeds → server decodes)
-    vmapped over the slot axis: per-slot position ``t``, per-slot key and
-    an ``active`` mask (inactive slots compute padding at position 0 and
-    keep their counters; their caches are rebuilt from zeros at the next
-    admission). The sampled token lands in the slot's on-device
-    generation buffer at ``gen_pos`` — no host transfer inside the loop.
+    Per step every slot samples from its carried logits on its own key
+    stream, the owning client embeds the token, and the server runs ONE
+    batched paged decode over all slots (``server_decode_paged``). The
+    active mask derives on device from ``remaining > 0``, so the host
+    never touches the loop; a slot that hits zero simply freezes (its
+    uplink embedding is zeroed, its recurrent state held, its KV row
+    routed to the trash page).
+
+    Inactive slots still pay the backbone FLOPs for their batch row:
+    under a batched (or vmapped) step XLA lowers per-row ``cond`` to
+    ``select`` — both branches run — and a dense matmul has no ragged
+    batch. The engine bounds that waste structurally instead: the block
+    length never exceeds the smallest active ``remaining`` (an occupied
+    slot is never stepped past its retirement) and the host loop stops
+    the moment no slot is occupied, so idle rows only ride along while
+    the queue is empty and other slots still stream. True row skipping
+    needs slot compaction across bucketed batch sizes (a recompile per
+    occupancy) or ragged kernels — a TPU-pass item (see ROADMAP).
     """
     serving._require_serve_plane(adapter)
+    if adapter.server_decode_paged is None:
+        raise ValueError(
+            f"adapter {adapter.name!r} has no server_decode_paged hook; "
+            "the paged continuous scheduler needs it")
     span = seq_len // n_clients
 
-    def slot_body(params, logits, caches, t, gen_pos, key_data, active,
-                  gen_buf):
-        key = jax.random.wrap_key_data(key_data)
-        nxt = serving.sample_token(logits, key, t, temperature,
-                                   vocab_size)                     # (1,)
-        idx = jnp.clip(gen_pos, 0, gen_buf.shape[0] - 1)
-        gen_buf = gen_buf.at[idx].set(
-            jnp.where(active > 0, nxt[0], gen_buf[idx]))
-        ts = jnp.where(active > 0, t, 0)
-        m = ts // span
-        client_m = jax.tree.map(lambda a: a[m], params["clients"])
-        e = adapter.client_embed(client_m, nxt[:, None])
-        logits, caches = adapter.server_decode(params["server"], e, caches,
-                                               ts)
-        return logits, caches, t + active, gen_pos + active, gen_buf
+    def block(params, tables, keydata_st, logits_st, caches_st, t_st,
+              gen_pos_st, rem_st, gen_buf_st):
+        sl = jnp.arange(n_slots)
 
-    batched = jax.vmap(slot_body, in_axes=(None, 0, 0, 0, 0, 0, 0, 0))
-    return jax.jit(batched, donate_argnums=(1, 2, 3, 4, 7))
+        def body(carry, _):
+            logits, caches, t, gen_pos, rem, gen_buf = carry
+            active = (rem > 0).astype(jnp.int32)
+            nxt = jax.vmap(
+                lambda lg, kd, tt: serving.sample_token(
+                    lg, jax.random.wrap_key_data(kd), tt, temperature,
+                    vocab_size))(logits, keydata_st, t)        # (n, 1)
+            nxt = nxt[:, 0]
+            idx = jnp.clip(gen_pos, 0, gen_buf.shape[1] - 1)
+            gen_buf = gen_buf.at[sl, idx].set(
+                jnp.where(active > 0, nxt, gen_buf[sl, idx]))
+
+            m = jnp.where(active > 0, t, 0) // span
+
+            def embed_one(tok, mi):
+                client_m = jax.tree.map(lambda a: a[mi], params["clients"])
+                return adapter.client_embed(client_m, tok[None, None])
+
+            e = jax.vmap(embed_one)(nxt, m)[:, 0]              # (n, 1, d)
+            e = e * (active > 0).astype(e.dtype)[:, None, None]
+            lg, caches = adapter.server_decode_paged(
+                params["server"], e, caches, tables, t, active, page_size)
+            return (lg[:, None], caches, t + active, gen_pos + active,
+                    rem - active, gen_buf), None
+
+        carry, _ = jax.lax.scan(
+            body, (logits_st, caches_st, t_st, gen_pos_st, rem_st,
+                   gen_buf_st), None, length=n_steps)
+        return carry
+
+    return jax.jit(block, donate_argnums=(3, 4, 5, 6, 7, 8))
 
 
-@functools.lru_cache(maxsize=16)
-def make_slot_write(adapter: ModelAdapter):
-    """Jitted slot-state writer: installs a freshly prefilled slot (its
-    caches + decode-seed logits) into the stacked slot state."""
+@functools.lru_cache(maxsize=32)
+def make_install_prog(adapter: ModelAdapter, seq_len: int):
+    """The slot-install scatter: move a wave of freshly prefilled
+    requests from the dense prefill buffer into their allocated pages
+    (pooled leaves) / their slot rows (state leaves), and set the wave's
+    logits, clocks, remaining counters and key streams in one compiled
+    call. One program per (prompt_len, wave_width) shape pair; shared
+    across scheduler instances (lru on the frozen adapter)."""
+    plans = paging.leaf_plans(adapter.cache_specs(1, seq_len))
 
-    def write(caches_st, logits_st, slot_caches, slot_logits, i):
-        caches_st = jax.tree.map(lambda a, b: a.at[i].set(b), caches_st,
-                                 slot_caches)
-        return caches_st, logits_st.at[i].set(slot_logits)
+    def install(caches_st, logits_st, t_st, gen_pos_st, rem_st,
+                keydata_st, dense_caches, logits, rows, slots, t0s,
+                rem0s, keydata_w):
+        def one(st, dense, plan):
+            if plan.pooled:
+                # pooled leaves are (layers, B, S, *tail) densely: scatter
+                # each wave row's first prompt_len positions to its pages
+                n_pages, pg = st.shape[1], st.shape[2]
+                flat = st.reshape((st.shape[0], n_pages * pg)
+                                  + st.shape[3:])
+                vals = dense[:, :, :rows.shape[1]]
+                flat = flat.at[:, rows].set(vals.astype(st.dtype))
+                return flat.reshape(st.shape)
+            idx = (slice(None),) * plan.batch_axis + (slots,)
+            return st.at[idx].set(dense.astype(st.dtype))
 
-    return jax.jit(write, donate_argnums=(0, 1))
+        caches_st = jax.tree.map(one, caches_st, dense_caches, plans)
+        return (caches_st, logits_st.at[slots].set(logits[:, None]),
+                t_st.at[slots].set(t0s),
+                gen_pos_st.at[slots].set(jnp.zeros_like(t0s)),
+                rem_st.at[slots].set(rem0s),
+                keydata_st.at[slots].set(keydata_w))
+
+    return jax.jit(install, donate_argnums=(0, 1, 2, 3, 4, 5))
 
 
 class ServeScheduler:
@@ -119,13 +200,26 @@ class ServeScheduler:
     ``submit()`` queues requests; ``run()`` drains the queue through the
     fixed slots and returns :class:`RequestResult` per request (rid
     order). Construct via :meth:`repro.federation.Federation.serve`.
+
+    ``page_size`` must divide ``seq_len`` (default: the largest divisor
+    <= 8); ``n_pages`` sizes the shared pool (default: worst case,
+    ``max_batch`` full-length sequences + the two reserved pages). A
+    smaller pool admission-gates requests on free pages instead of free
+    slots — peak cache memory then tracks the lengths actually in
+    flight, not ``max_batch × seq_len``.
     """
 
     def __init__(self, adapter: ModelAdapter, transport, *, params,
                  n_clients: int, seq_len: int, embed_dim: int,
                  vocab_size: int, max_batch: int = 4,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None):
         serving._require_serve_plane(adapter)
+        if adapter.server_decode_paged is None:
+            raise ValueError(
+                f"adapter {adapter.name!r} has no server_decode_paged "
+                "hook; build the session from a ModelConfig to serve")
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.adapter = adapter
@@ -139,34 +233,58 @@ class ServeScheduler:
         self.max_batch = max_batch
         self.temperature = float(temperature)
 
+        self.page_size = (paging.default_page_size(seq_len)
+                          if page_size is None else int(page_size))
+        if self.page_size < 1 or seq_len % self.page_size:
+            raise ValueError(
+                f"page_size={self.page_size} must divide seq_len={seq_len}")
+        self.pages_per_seq = seq_len // self.page_size
+        self.n_pages = (max_batch * self.pages_per_seq + paging.N_RESERVED
+                        if n_pages is None else int(n_pages))
+        self.allocator = paging.PageAllocator(self.n_pages)
+
         self._queue: List[ServeRequest] = []
         self._next_rid = 0
         self._slot_req: List[Optional[ServeRequest]] = [None] * max_batch
-        self._remaining = np.zeros(max_batch, np.int64)
+        self._slot_pages: List[Optional[np.ndarray]] = [None] * max_batch
+        self._remaining = np.zeros(max_batch, np.int64)   # host mirror
         self._admitted_at = np.zeros(max_batch, np.int64)
+        self._tables = np.full((max_batch, self.pages_per_seq),
+                               paging.ZERO_PAGE, np.int32)
         self._results: Dict[int, RequestResult] = {}
 
-        # device-side slot state (logits dtype is model-dependent; built
-        # lazily from the first prefill)
-        self._caches_st = None      # leading (max_batch,) slot axis
+        # device-side slot state. Sequence cache leaves live in the shared
+        # page pool; recurrent state leaves are slot-stacked. (Logits
+        # dtype is model-dependent — built lazily from the first prefill.)
+        dense_specs = adapter.cache_specs(1, seq_len)
+        self._plans = paging.leaf_plans(dense_specs)
+        paged_specs = paging.paged_specs(
+            dense_specs, n_slots=max_batch, n_pages=self.n_pages,
+            page_size=self.page_size)
+        self._caches_st = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)), paged_specs,
+            is_leaf=lambda x: hasattr(x, "logical"))
         self._logits_st = None      # (slots, 1, 1, vocab)
         self._t_st = jnp.zeros(max_batch, jnp.int32)
         self._gen_pos_st = jnp.zeros(max_batch, jnp.int32)
-        self._active_st = jnp.zeros(max_batch, jnp.int32)
+        self._rem_st = jnp.zeros(max_batch, jnp.int32)
         self._gen_buf_st = jnp.zeros((max_batch, seq_len), jnp.int32)
         kd = jax.random.key_data(jax.random.key(0))
         self._keydata_st = jnp.zeros((max_batch,) + kd.shape, kd.dtype)
 
-        # the hot-loop executable, resolved once: slot shapes are fixed by
-        # construction (admissions/retirements never retrace), so _step
-        # must not pay a per-token cache-key rebuild over the param tree
-        self._step_prog = None
+        # persistent dense (1, seq_len) prefill buffer — only its small
+        # recurrent-state leaves are re-zeroed per admission
+        self._prefill_caches = None
+        # hot-loop executables keyed on the block length — the
+        # steady-state path never rebuilds an AOT cache key per block
+        self._block_progs: Dict[int, object] = {}
 
         # perf counters (the throughput bench reads these)
         self.steps = 0
         self.compile_s = 0.0
         self.generated_tokens = 0
         self.last_run_s = 0.0
+        self.host_transfers = 0     # device->host fetches (one per wave)
 
     # ------------------------------------------------------- queueing ----
     def submit(self, prompt, gen_len: int, *, seed: Optional[int] = None,
@@ -185,6 +303,12 @@ class ServeScheduler:
             raise ValueError(
                 f"prompt_len + gen_len = {prompt.size + gen_len} exceeds "
                 f"the session seq_len {self.seq_len}")
+        need = paging.pages_needed(prompt.size + gen_len, self.page_size)
+        if need > self.allocator.capacity:
+            raise ValueError(
+                f"request needs {need} pages but the pool holds "
+                f"{self.allocator.capacity} (n_pages={self.n_pages}, "
+                f"page_size={self.page_size})")
         rid = self._next_rid
         if key is None and seed is None:
             key = jax.random.fold_in(jax.random.key(0), rid)
@@ -196,19 +320,40 @@ class ServeScheduler:
         return rid
 
     # ------------------------------------------------------ admission ----
-    def _admit(self, slot: int, req: ServeRequest):
-        """Chunk-prefill the request's prompt into the slot (fresh zero
-        caches) and install the slot state. Prefill wire traffic is
-        logged at admission: prompt_len embedding uploads, no downlink."""
-        B1 = 1
-        prompt_len = req.prompt.size
-        caches = serving.zero_caches(self.adapter, B1, self.seq_len)
-        toks = jnp.asarray(req.prompt[None], jnp.int32)
+    def _prefill_wave(self, reqs: List[ServeRequest]):
+        """Chunk-prefill a wave of equal-length prompts as ONE batch.
+
+        A width-1 wave reuses the persistent dense buffer (recurrent
+        state leaves re-zeroed; stale KV rows from the previous tenant
+        sit beyond the causal mask of every prefill query position and
+        contribute exactly 0.0 — bitwise-identical to a fresh zero
+        buffer). Wider waves prefill through one (w, prompt_len) batch
+        into transient zero caches: w prompts pay ONE dispatch chain
+        instead of w. Batched rows staying bitwise-equal to a B=1
+        prefill is an empirical backend property, not an XLA guarantee —
+        exactly the same status as the decode scan matching the eager
+        loop or split matching global — and it is pinned by
+        tests/test_serving_engine.py (wave admission at sampling
+        temperature, where low-bit drift is visible)."""
+        w = len(reqs)
+        prompt_len = reqs[0].prompt.size
+        if w == 1:
+            if self._prefill_caches is None:
+                self._prefill_caches = serving.zero_caches(
+                    self.adapter, 1, self.seq_len)
+            else:
+                self._prefill_caches = jax.tree.map(
+                    lambda a, plan: a if plan.pooled else jnp.zeros_like(a),
+                    self._prefill_caches, self._plans)
+            caches = self._prefill_caches
+        else:
+            caches = serving.zero_caches(self.adapter, w, self.seq_len)
+        toks = jnp.asarray(np.stack([r.prompt for r in reqs]), jnp.int32)
+        logits = None
         if self.adapter.server_prefill is not None:
             chunk_fn = serving.make_prefill_chunk(self.adapter,
                                                   self.n_clients,
                                                   self.seq_len)
-            logits = None
             for t0, t1, m in serving.prefill_plan(prompt_len, self.span):
                 prog, dt = serving.compiled_with_timing(
                     chunk_fn, self.params, toks[:, t0:t1], caches, t0, m)
@@ -221,84 +366,143 @@ class ServeScheduler:
             prog, dt = serving.compiled_with_timing(
                 step, self.params, toks[:, :1], caches, 0)
             self.compile_s += dt
-            logits = None
             for t in range(prompt_len):
                 logits, caches = prog(self.params, toks[:, t:t + 1],
                                       caches, t)
+        if w == 1:
+            self._prefill_caches = caches
+        return logits, caches
 
-        if self._caches_st is None:
-            # first admission fixes the stacked dtypes/shapes
-            self._caches_st = jax.tree.map(
-                lambda a: jnp.zeros((self.max_batch,) + a.shape, a.dtype),
-                caches)
+    def _admit_wave(self, slots: List[int], reqs: List[ServeRequest]):
+        """Prefill a wave of requests, allocate their pages, and install
+        all their slot state with ONE compiled scatter — async dispatches
+        only, no host sync. Prefill wire traffic is logged here per
+        request: prompt_len embedding uploads, no downlink."""
+        w = len(reqs)
+        prompt_len = reqs[0].prompt.size
+        pages = [self.allocator.alloc(paging.pages_needed(
+            r.prompt.size + r.gen_len, self.page_size)) for r in reqs]
+
+        logits, caches = self._prefill_wave(reqs)
+        if self._logits_st is None:
             self._logits_st = jnp.zeros(
-                (self.max_batch,) + logits.shape, logits.dtype)
-        write = make_slot_write(self.adapter)
-        prog, dt = serving.compiled_with_timing(
-            write, self._caches_st, self._logits_st, caches, logits, slot)
-        self.compile_s += dt
-        self._caches_st, self._logits_st = prog(
-            self._caches_st, self._logits_st, caches, logits, slot)
+                (self.max_batch, 1) + logits.shape[1:], logits.dtype)
 
-        self._t_st = self._t_st.at[slot].set(prompt_len)
-        self._gen_pos_st = self._gen_pos_st.at[slot].set(0)
-        self._active_st = self._active_st.at[slot].set(1)
-        self._keydata_st = self._keydata_st.at[slot].set(
-            jax.random.key_data(req.key))
-        self._slot_req[slot] = req
-        self._remaining[slot] = req.gen_len
-        self._admitted_at[slot] = self.steps
-        self.transport.account_serve(batch=B1, embed=self.embed_dim,
-                                     n_steps=prompt_len, n_gen=0,
-                                     ledger=req.ledger)
+        rows = jnp.asarray(np.stack([
+            paging.install_rows(p, prompt_len, self.page_size)
+            for p in pages]))
+        kd = np.stack([np.asarray(jax.random.key_data(r.key))
+                       for r in reqs])
+        fn = make_install_prog(self.adapter, self.seq_len)
+        args = (self._caches_st, self._logits_st, self._t_st,
+                self._gen_pos_st, self._rem_st, self._keydata_st,
+                caches, logits, rows, np.asarray(slots, np.int32),
+                np.full(w, prompt_len, np.int32),
+                np.asarray([r.gen_len for r in reqs], np.int32), kd)
+        prog, dt = serving.compiled_with_timing(fn, *args)
+        self.compile_s += dt
+        (self._caches_st, self._logits_st, self._t_st, self._gen_pos_st,
+         self._rem_st, self._keydata_st) = prog(*args)
+
+        for slot, req, page_ids in zip(slots, reqs, pages):
+            self._tables[slot, :] = paging.ZERO_PAGE
+            self._tables[slot, :len(page_ids)] = page_ids
+            self._slot_pages[slot] = page_ids
+            self._slot_req[slot] = req
+            self._remaining[slot] = req.gen_len
+            self._admitted_at[slot] = self.steps
+            self.transport.account_serve(batch=1, embed=self.embed_dim,
+                                         n_steps=req.prompt.size, n_gen=0,
+                                         ledger=req.ledger)
 
     def _admit_free_slots(self):
-        for slot in range(self.max_batch):
-            if self._slot_req[slot] is None and self._queue:
-                self._admit(slot, self._queue.pop(0))
+        """FIFO wave admission: take the queue's head run of equal-length
+        prompts that fits the free slots AND the page pool, prefill it as
+        one batch and install it with one compiled scatter. The queue is
+        never reordered — if the head doesn't fit, nothing jumps it."""
+        while self._queue:
+            free = [s for s in range(self.max_batch)
+                    if self._slot_req[s] is None]
+            if not free:
+                return
+            avail = self.allocator.available
+            pl = self._queue[0].prompt.size
+            wave = []
+            for req in self._queue:
+                need = paging.pages_needed(req.prompt.size + req.gen_len,
+                                           self.page_size)
+                if (len(wave) == len(free) or req.prompt.size != pl
+                        or need > avail):
+                    break
+                wave.append(req)
+                avail -= need
+            if not wave:
+                # page-gated: wait for a retirement wave to free pages
+                return
+            del self._queue[:len(wave)]
+            self._admit_wave(free[:len(wave)], wave)
 
     # ----------------------------------------------------- the engine ----
-    def _step(self):
-        """One continuous-batching step: every active slot samples its
-        next token and advances one position — one compiled dispatch for
-        the whole mix, per-slot wire metering on the host."""
-        if self._step_prog is None:
-            step_fn = make_slot_decode_step(self.adapter, self.n_clients,
-                                            self.seq_len, self.temperature,
-                                            self.vocab_size)
-            self._step_prog, dt = serving.compiled_with_timing(
-                step_fn, self.params, self._logits_st, self._caches_st,
-                self._t_st, self._gen_pos_st, self._keydata_st,
-                self._active_st, self._gen_buf_st)
-            self.compile_s += dt
-        (self._logits_st, self._caches_st, self._t_st, self._gen_pos_st,
-         self._gen_buf_st) = self._step_prog(
-            self.params, self._logits_st, self._caches_st, self._t_st,
-            self._gen_pos_st, self._keydata_st, self._active_st,
-            self._gen_buf_st)
-        self.steps += 1
-        for slot, req in enumerate(self._slot_req):
-            if req is None:
-                continue
-            self.transport.account_serve_step(
-                batch=1, embed=self.embed_dim, ledger=req.ledger)
-            self.generated_tokens += 1
-            self._remaining[slot] -= 1
-            if self._remaining[slot] <= 0:
-                self._retire(slot)
+    def _block_len(self) -> int:
+        occ = [s for s, r in enumerate(self._slot_req) if r is not None]
+        m = int(min(self._remaining[s] for s in occ))
+        return 1 << (max(m, 1).bit_length() - 1)    # pow2 floor <= min rem
 
-    def _retire(self, slot: int):
-        """The request's tokens leave the device HERE — one transfer per
-        request, at retirement."""
-        req = self._slot_req[slot]
-        toks = np.asarray(self._gen_buf_st[slot, :req.gen_len])
-        self._results[req.rid] = RequestResult(
-            rid=req.rid, tokens=toks, ledger=req.ledger,
-            prompt_len=req.prompt.size,
-            admitted_at=int(self._admitted_at[slot]),
-            finished_at=self.steps)
-        self._slot_req[slot] = None
-        self._active_st = self._active_st.at[slot].set(0)
+    def _block_step(self):
+        """Run one compiled K-step decode block over all slots — one
+        dispatch, zero host syncs."""
+        n_occ = self.active
+        if n_occ == 0:
+            return
+        k = self._block_len()
+        prog = self._block_progs.get(k)
+        tables = jnp.asarray(self._tables)
+        args = (self.params, tables, self._keydata_st, self._logits_st,
+                self._caches_st, self._t_st, self._gen_pos_st,
+                self._rem_st, self._gen_buf_st)
+        if prog is None:
+            block_fn = make_paged_decode_block(
+                self.adapter, self.n_clients, self.seq_len,
+                self.temperature, self.vocab_size, self.page_size,
+                self.max_batch, k)
+            prog, dt = serving.compiled_with_timing(block_fn, *args)
+            self.compile_s += dt
+            self._block_progs[k] = prog
+        (self._logits_st, self._caches_st, self._t_st, self._gen_pos_st,
+         self._rem_st, self._gen_buf_st) = prog(*args)
+        self.steps += k
+        self.generated_tokens += k * n_occ
+        for slot, req in enumerate(self._slot_req):
+            if req is not None:
+                self._remaining[slot] -= k
+
+    def _retire_wave(self):
+        """Retire every slot that finished in the last block: ONE
+        batched device→host fetch for all of them, generation wire
+        accounted in one deferred call per request (byte-identical to
+        the per-step metering it replaces — see the module docstring)."""
+        done = [s for s, r in enumerate(self._slot_req)
+                if r is not None and self._remaining[s] <= 0]
+        if not done:
+            return
+        toks_all = np.asarray(self._gen_buf_st[jnp.asarray(
+            np.array(done, np.int32))])
+        self.host_transfers += 1
+        for row, slot in enumerate(done):
+            req = self._slot_req[slot]
+            self.transport.account_serve(batch=1, embed=self.embed_dim,
+                                         n_steps=req.gen_len,
+                                         n_gen=req.gen_len,
+                                         ledger=req.ledger)
+            self._results[req.rid] = RequestResult(
+                rid=req.rid, tokens=toks_all[row, :req.gen_len],
+                ledger=req.ledger, prompt_len=req.prompt.size,
+                admitted_at=int(self._admitted_at[slot]),
+                finished_at=self.steps)
+            self.allocator.free_(self._slot_pages[slot])
+            self._slot_pages[slot] = None
+            self._tables[slot, :] = paging.ZERO_PAGE
+            self._slot_req[slot] = None
 
     # ----------------------------------------------------------- drive ----
     @property
@@ -306,18 +510,20 @@ class ServeScheduler:
         return sum(r is not None for r in self._slot_req)
 
     def run(self) -> List[RequestResult]:
-        """Drain the queue: admit into free slots as they open up
-        mid-flight, step the batch until every submitted request is done.
-        Returns THIS drain's results in rid order (requests drained by an
-        earlier ``run()`` stay retrievable via ``results``); wall-clock
-        minus compile is exposed as ``last_run_s``."""
+        """Drain the queue: admit into free slots (and free pages) as
+        they open up mid-flight, run compiled decode blocks until every
+        submitted request is done. Returns THIS drain's results in rid
+        order (requests drained by an earlier ``run()`` stay retrievable
+        via ``results``); wall-clock minus compile is exposed as
+        ``last_run_s``."""
         draining = sorted([r.rid for r in self._queue]
                           + [r.rid for r in self._slot_req if r is not None])
         tic = time.perf_counter()
         compile0 = self.compile_s
         while self._queue or self.active:
             self._admit_free_slots()
-            self._step()
+            self._block_step()
+            self._retire_wave()
         jax.block_until_ready(self._gen_buf_st)
         self.last_run_s = (time.perf_counter() - tic
                            - (self.compile_s - compile0))

@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import weakref
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -79,16 +80,80 @@ class ServeResult:
 _AOT_CACHE: Dict = {}
 _AOT_CACHE_MAX = 256
 
+# Signature memo for big containers (param trees): the old _sig flattened
+# the FULL params pytree on every lookup — hundreds of leaves walked per
+# serve step just to discover the same signature again. A container's
+# signature is now memoized on its id(), guarded by (type, len) and a
+# weakref to its first leaf: identity of the container plus identity of
+# its first leaf pins the same live tree (a dead tree whose id got reused
+# fails the anchor check, because its leaves died with it). Trees are
+# treated as immutable once built — true for params/caches here, which
+# are only ever REPLACED (donation returns fresh containers), never
+# mutated in place.
+_TREE_SIG_MEMO: Dict[int, Tuple] = {}
+_TREE_SIG_MEMO_MAX = 512
+_SIG_STATS = {"flattens": 0, "memo_hits": 0}
+
+
+def _leaf_sig(leaf):
+    if isinstance(leaf, (bool, int, float)):
+        return ("py", type(leaf).__name__)
+    return ("leaf", tuple(leaf.shape), str(leaf.dtype))
+
+
+def _first_leaf(obj):
+    for _ in range(64):
+        if isinstance(obj, dict):
+            if not obj:
+                return None
+            obj = obj[next(iter(obj))]
+        elif isinstance(obj, (list, tuple)):
+            if not obj:
+                return None
+            obj = obj[0]
+        else:
+            return obj
+    return obj
+
+
+def _container_sig(obj) -> Tuple:
+    oid = id(obj)
+    anchor = _first_leaf(obj)
+    memo = _TREE_SIG_MEMO.get(oid)
+    if memo is not None:
+        ref, guard, sig = memo
+        if guard == (type(obj), len(obj)) and (
+                ref() is anchor if ref is not None else anchor is None):
+            _SIG_STATS["memo_hits"] += 1
+            return sig
+    _SIG_STATS["flattens"] += 1
+    leaves, treedef = jax.tree.flatten(obj)
+    sig = (treedef, tuple(_leaf_sig(x) for x in leaves))
+    try:
+        ref = weakref.ref(anchor) if anchor is not None else None
+    except TypeError:
+        ref = None
+    while len(_TREE_SIG_MEMO) >= _TREE_SIG_MEMO_MAX:
+        del _TREE_SIG_MEMO[next(iter(_TREE_SIG_MEMO))]
+    _TREE_SIG_MEMO[oid] = (ref, (type(obj), len(obj)), sig)
+    return sig
+
 
 def _sig(args) -> Tuple:
-    leaves, treedef = jax.tree.flatten(args)
     out = []
-    for leaf in leaves:
-        if isinstance(leaf, (bool, int, float)):
-            out.append(type(leaf).__name__)
+    for a in args:
+        if isinstance(a, (bool, int, float)):
+            out.append(("py", type(a).__name__))
+        elif isinstance(a, (dict, list, tuple)):
+            out.append(("tree", _container_sig(a)))
+        elif hasattr(a, "shape") and hasattr(a, "dtype"):
+            out.append(_leaf_sig(a))
         else:
-            out.append((tuple(leaf.shape), str(leaf.dtype)))
-    return treedef, tuple(out)
+            _SIG_STATS["flattens"] += 1
+            leaves, treedef = jax.tree.flatten(a)
+            out.append(("tree", (treedef,
+                                 tuple(_leaf_sig(x) for x in leaves))))
+    return tuple(out)
 
 
 def compiled_with_timing(jitted, *args):

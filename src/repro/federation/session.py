@@ -284,14 +284,19 @@ class Federation:
             chunked_prefill=chunked_prefill)
 
     def serve(self, params, *, max_batch: int = 4,
-              temperature: float = 0.0):
+              temperature: float = 0.0, page_size: Optional[int] = None,
+              n_pages: Optional[int] = None):
         """A continuous-batching serve session over the split plane.
 
         Returns a :class:`repro.federation.scheduler.ServeScheduler`:
         ``submit(prompt, gen_len=...)`` queues requests, ``run()`` drains
         them through ``max_batch`` fixed slots — new requests are admitted
-        as slots free up mid-flight, one compiled step serves the churning
-        mix, and each request gets its own exact wire ledger."""
+        as slots free up mid-flight, compiled multi-step decode blocks
+        serve the churning mix, and each request gets its own exact wire
+        ledger. Slot caches live in a shared page pool (``page_size``
+        must divide ``seq_len``; ``n_pages`` caps pool memory and
+        admission-gates requests on free pages when set below the
+        ``max_batch`` worst case)."""
         from repro.federation.scheduler import ServeScheduler
         if self.model_cfg is None:
             raise ValueError(
@@ -304,7 +309,7 @@ class Federation:
             n_clients=self.n_clients, seq_len=self.seq_len,
             embed_dim=self.model_cfg.d_model,
             vocab_size=self.model_cfg.vocab_size, max_batch=max_batch,
-            temperature=temperature)
+            temperature=temperature, page_size=page_size, n_pages=n_pages)
 
     # ------------------------------------------------- checkpoint plane ---
     def save(self, path: str, params, *, step: int = 0,

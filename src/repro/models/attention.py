@@ -142,8 +142,10 @@ def decode_attend(q, k_cache, v_cache, cur_pos, *, window: int = 0,
     G = Hq // Hkv
     scale = hd ** -0.5 if scale is None else scale
     qr = q.reshape(B, Hkv, G, hd).astype(jnp.float32) * scale
+    cur_pos = jnp.asarray(cur_pos)
 
     if window_gather and window > 0 and window < S:
+        assert cur_pos.ndim == 0, "window_gather needs a shared cur_pos"
         start = jnp.clip(cur_pos + 1 - window, 0, S - window)
         k_cache = jax.lax.dynamic_slice_in_dim(k_cache, start, window, axis=1)
         v_cache = jax.lax.dynamic_slice_in_dim(v_cache, start, window, axis=1)
@@ -154,23 +156,49 @@ def decode_attend(q, k_cache, v_cache, cur_pos, *, window: int = 0,
     s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache.astype(jnp.float32))
     if logit_softcap > 0.0:
         s = logit_softcap * jnp.tanh(s / logit_softcap)
-    mask = kpos <= cur_pos
-    if window > 0:
-        mask &= kpos > (cur_pos - window)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if cur_pos.ndim:                                     # per-row positions
+        mask = kpos[None, :] <= cur_pos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > (cur_pos[:, None] - window)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    else:
+        mask = kpos <= cur_pos
+        if window > 0:
+            mask &= kpos > (cur_pos - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return o.reshape(B, 1, Hq, vd).astype(q.dtype)
+
+
+# ------------------------------------------------------- paged cache ops --
+
+def paged_update_gather(pool, row, dest_page, in_page, gather_rows):
+    """Write one row per batch element into the page pool, then gather
+    each element's full (masked) sequence extent back out.
+
+    pool: (n_pages, page_size, *tail); row: (B, *tail) the new entry;
+    dest_page/in_page: (B,) write coordinates (inactive rows land on the
+    trash page — never read); gather_rows: (B, S_pad) flat pool rows.
+    Returns (new_pool, gathered (B, S_pad, *tail))."""
+    P, pg = pool.shape[:2]
+    flat = pool.reshape((P * pg,) + pool.shape[2:])
+    flat = flat.at[dest_page * pg + in_page].set(row.astype(pool.dtype))
+    return flat.reshape(pool.shape), flat[gather_rows]
 
 
 # -------------------------------------------------------------- GQA block --
 
 def attention_apply(cfg, p, x, *, positions, cache=None, cur_pos=None,
                     window: int = 0, kv_override=None, causal=True,
-                    window_gather: bool = False):
+                    window_gather: bool = False, paging=None):
     """Full attention sub-layer. Returns (out, new_cache_slice).
 
-    cache: dict(k=(B,S,Hkv,hd), v=...) for this layer, or None.
+    cache: dict(k=(B,S,Hkv,hd), v=...) for this layer, or None. With
+    ``paging`` set (the continuous scheduler's batched decode step) the
+    cache leaves are shared page pools (n_pages, page_size, Hkv, hd)
+    instead, ``cur_pos`` is a per-row (B,) vector, and the new k/v row is
+    scattered through the slot's block table.
     kv_override: (B, Se, d) source for cross-attention (whisper decoder).
     """
     B, S, d = x.shape
@@ -197,7 +225,24 @@ def attention_apply(cfg, p, x, *, positions, cache=None, cur_pos=None,
 
     q = shard_constraint(q, ("batch", None, "heads_act", None))
     new_cache = None
-    if cache is not None and kv_override is None:
+    if paging is not None and kv_override is None:
+        # paged decode: one token per slot. Scatter the new k/v row into
+        # the shared pool through the slot's block table, gather the
+        # slot's full seq_len extent back, and attend with the per-row
+        # position mask — masked positions (stale page contents, the
+        # zero page) contribute exactly 0.0, so this is bitwise-equal to
+        # the dense slot-stacked path it replaces.
+        assert S == 1, "paged attention decodes one token per slot"
+        dest_page, in_page = paging.write_rows(cur_pos)
+        rows = paging.gather_rows()
+        pool_k, k_cache = paged_update_gather(
+            cache["k"], k[:, 0], dest_page, in_page, rows)
+        pool_v, v_cache = paged_update_gather(
+            cache["v"], v[:, 0], dest_page, in_page, rows)
+        o = decode_attend(q, k_cache, v_cache, cur_pos, window=window,
+                          logit_softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": pool_k, "v": pool_v}
+    elif cache is not None and kv_override is None:
         # decode: write this step's k/v at cur_pos, attend over the cache
         k_cache = jax.lax.dynamic_update_slice_in_dim(
             cache["k"], k.astype(cache["k"].dtype), cur_pos, axis=1)
@@ -246,10 +291,17 @@ def _mla_absorbed_decode(cfg, p, q_nope, q_rope, lat, kr, cur_pos, *,
          + jnp.einsum("bshd,bkd->bhsk", q_rope.astype(jnp.float32),
                       kr.astype(jnp.float32))) * scale
     kpos = jnp.arange(lat.shape[1])
-    mask = kpos <= cur_pos
-    if window > 0:
-        mask &= kpos > (cur_pos - window)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    cur_pos = jnp.asarray(cur_pos)
+    if cur_pos.ndim:                                      # per-row positions
+        mask = kpos[None, :] <= cur_pos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > (cur_pos[:, None] - window)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    else:
+        mask = kpos <= cur_pos
+        if window > 0:
+            mask &= kpos > (cur_pos - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)                    # (B,H,1,S)
     ctx = jnp.einsum("bhsk,bkr->bshr", pattn, lat.astype(jnp.float32))
     o = jnp.einsum("bshr,rhv->bshv", ctx, w_uv.astype(jnp.float32))
@@ -270,7 +322,7 @@ def _mla_expand(cfg, p, latent, k_rope, dtype):
 
 
 def mla_apply(cfg, p, x, *, positions, cache=None, cur_pos=None,
-              window: int = 0):
+              window: int = 0, paging=None):
     """DeepSeek-V3 Multi-head Latent Attention.
 
     Cache stores only (kv_lora_rank + qk_rope_dim) per token; k/v are
@@ -298,7 +350,25 @@ def mla_apply(cfg, p, x, *, positions, cache=None, cur_pos=None,
                         cfg.rope_theta, has_heads=False)   # (B,S,rd) shared
 
     new_cache = None
-    if cache is not None:
+    if paging is not None:
+        # paged decode over the latent pool (n_pages, page_size, width):
+        # same scatter-through-table + full-extent gather as the GQA path.
+        assert S == 1, "paged MLA decodes one token per slot"
+        packed = jnp.concatenate([latent, k_rope], axis=-1)
+        dest_page, in_page = paging.write_rows(cur_pos)
+        pool, lat_cache = paged_update_gather(
+            cache["latent"], packed[:, 0], dest_page, in_page,
+            paging.gather_rows())
+        new_cache = {"latent": pool}
+        lat = lat_cache[..., :cfg.kv_lora_rank].astype(dt)
+        kr = lat_cache[..., cfg.kv_lora_rank:].astype(dt)
+        if cfg.mla_absorb:
+            o = _mla_absorbed_decode(cfg, p, q_nope, q_rope, lat, kr,
+                                     cur_pos, window=window, scale=scale)
+        else:
+            k, v = _mla_expand(cfg, p, lat, kr, dt)
+            o = decode_attend(q, k, v, cur_pos, window=window, scale=scale)
+    elif cache is not None:
         packed = jnp.concatenate([latent, k_rope], axis=-1)
         lat_cache = jax.lax.dynamic_update_slice_in_dim(
             cache["latent"], packed.astype(cache["latent"].dtype), cur_pos, axis=1)

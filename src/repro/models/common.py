@@ -88,6 +88,53 @@ def param_bytes(tree) -> int:
 
 
 # ---------------------------------------------------------------------------
+# paged decode context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PageContext:
+    """Batched paged-decode context threaded through ``backbone_apply``.
+
+    Present only on the continuous scheduler's batched decode step:
+    sequence-indexed cache leaves arrive as shared page pools
+    ``(n_pages, page_size, *tail)`` per layer instead of slot-stacked
+    ``(B, S, *tail)`` slices, and ``tables``/``active`` say where each
+    slot's rows live and whether its write should land in the pool at
+    all (inactive slots write to the reserved trash page). Constructed
+    inside traced code — never crosses a jit boundary itself."""
+    tables: jax.Array        # (B, pages_per_seq) int32 page ids
+    active: jax.Array        # (B,) int32 — 0 routes writes to TRASH_PAGE
+    page_size: int
+    trash_page: int = 1
+
+    def gather_rows(self) -> jax.Array:
+        """(B, pages_per_seq * page_size) flat pool-row ids covering each
+        slot's full (masked) sequence extent."""
+        B, npt = self.tables.shape
+        rows = (self.tables[:, :, None] * self.page_size
+                + jnp.arange(self.page_size)[None, None, :])
+        return rows.reshape(B, npt * self.page_size)
+
+    def write_rows(self, cur_pos: jax.Array):
+        """Per-slot (dest_page, in_page) for the token at ``cur_pos``
+        (B,); inactive slots are routed to the trash page."""
+        B = self.tables.shape[0]
+        page_of = cur_pos // self.page_size
+        dest = self.tables[jnp.arange(B), page_of]
+        dest = jnp.where(self.active > 0, dest, self.trash_page)
+        return dest, cur_pos % self.page_size
+
+
+def freeze_state(active, new, old):
+    """``where(active, new, old)`` with (B,)-active broadcast to any rank:
+    inactive slots' recurrent state stays EXACTLY frozen under the
+    batched decode step (their inputs are zeroed, but decay would still
+    drift the state — freezing keeps retired slots inert and finite)."""
+    a = active.reshape(active.shape + (1,) * (new.ndim - 1))
+    return jnp.where(a > 0, new, old)
+
+
+# ---------------------------------------------------------------------------
 # small helpers shared by the model files
 # ---------------------------------------------------------------------------
 

@@ -42,6 +42,11 @@ def rwkv_specs(cfg, d: int):
 
 
 def rwkv_state_specs(cfg, batch: int, d: int, dtype="float32"):
+    """Recurrent decode state (wkv matrix + token-shift tails). As in
+    `ssm_state_specs`, "cache_batch" with no "cache_seq" axis tells the
+    paged serve plane these leaves are sequence-independent: the
+    continuous scheduler slot-stacks them and freezes inactive rows
+    (`common.freeze_state`) rather than paging them."""
     H = cfg.n_rwkv_heads
     K = cfg.rwkv_head_dim
     return {

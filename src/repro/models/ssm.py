@@ -44,6 +44,12 @@ def ssm_specs(cfg, d: int):
 
 
 def ssm_state_specs(cfg, batch: int, d: int, dtype="float32"):
+    """Recurrent decode state. The logical axis names are load-bearing
+    for the paged serve plane (`federation/paging.py`): "cache_batch"
+    WITHOUT a "cache_seq" axis marks these leaves as sequence-independent
+    state, so the continuous scheduler slot-stacks them (batch axis
+    widened to the slot count, rows frozen via `common.freeze_state`
+    while a slot is inactive) instead of paging them."""
     d_in = cfg.ssm_expand * d
     H = d_in // cfg.ssm_head_dim
     return {

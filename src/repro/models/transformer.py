@@ -20,7 +20,7 @@ from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
-from repro.models.common import ParamSpec, stack_layer_specs
+from repro.models.common import ParamSpec, freeze_state, stack_layer_specs
 from repro.models.layers import (apply_norm, embed_lookup, norm_specs,
                                  unembed)
 from repro.models.mlp import mlp_apply, mlp_specs
@@ -101,16 +101,17 @@ def backbone_specs(cfg, max_seq: int):
 
 def _attn_block_apply(cfg, p, x, *, positions, cache=None, cur_pos=None,
                       window=0, decode=False, window_gather=False,
-                      gather_experts=False):
+                      gather_experts=False, paging=None):
     h = apply_norm(cfg, p["ln1"], x)
     if cfg.use_mla:
         a, new_cache = attn.mla_apply(cfg, p["attn"], h, positions=positions,
                                       cache=cache, cur_pos=cur_pos,
-                                      window=window)
+                                      window=window, paging=paging)
     else:
         a, new_cache = attn.attention_apply(
             cfg, p["attn"], h, positions=positions, cache=cache,
-            cur_pos=cur_pos, window=window, window_gather=window_gather)
+            cur_pos=cur_pos, window=window, window_gather=window_gather,
+            paging=paging)
     if cfg.rs_outputs:
         # force the TP output projection's partial sums to land directly in
         # the seq-sharded residual layout => reduce-scatter, not all-reduce
@@ -128,7 +129,7 @@ def _attn_block_apply(cfg, p, x, *, positions, cache=None, cur_pos=None,
     return x + m, new_cache, aux
 
 
-def _rwkv_block_apply(cfg, p, x, *, state=None):
+def _rwkv_block_apply(cfg, p, x, *, state=None, active=None):
     h = apply_norm(cfg, p["ln1"], x)
     tstate = None if state is None else {"wkv": state["wkv"],
                                          "shift": state["shift"]}
@@ -141,12 +142,18 @@ def _rwkv_block_apply(cfg, p, x, *, state=None):
     if state is not None:
         new_state = {"wkv": new_t["wkv"], "shift": new_t["shift"],
                      "shift_c": h2[:, -1].astype(state["shift_c"].dtype)}
+        if active is not None:
+            new_state = jax.tree.map(
+                lambda n, o: freeze_state(active, n, o), new_state, state)
     return x + c, new_state
 
 
-def _mamba_block_apply(cfg, p, x, *, state=None):
+def _mamba_block_apply(cfg, p, x, *, state=None, active=None):
     h = apply_norm(cfg, p["ln1"], x)
     s, new_state = ssm_mod.ssm_apply(cfg, p["ssm"], h, state=state)
+    if state is not None and active is not None:
+        new_state = jax.tree.map(
+            lambda n, o: freeze_state(active, n, o), new_state, state)
     return x + s, new_state
 
 
@@ -188,19 +195,25 @@ def scan_apply(cfg, body, carry, xs, n: int):
 
 
 def backbone_apply(cfg, params, x, *, positions, caches=None, cur_pos=None,
-                   window=0, window_gather=False, gather_experts=False):
+                   window=0, window_gather=False, gather_experts=False,
+                   paging=None):
     """Run the stacked blocks. x: (B,S,d) embeddings.
 
     caches: family-specific stacked state (leading dim = layers), or None.
+    ``paging`` (a :class:`repro.models.common.PageContext`) switches the
+    sequence-indexed cache leaves to the paged-pool layout with per-row
+    positions (the continuous scheduler's batched decode step); recurrent
+    state leaves are then slot-batched and frozen on inactive rows.
     Returns (hidden (B,S,d), new_caches, aux_losses).
     """
     decode = caches is not None
+    active = None if paging is None else paging.active
 
     if cfg.family == "ssm":
         def body(h, xs):
             p_l, st_l = xs
             h2, new_st = _rwkv_block_apply(cfg, p_l, _boundary(cfg, h),
-                                           state=st_l)
+                                           state=st_l, active=active)
             return h2, new_st
         body = _maybe_remat(cfg, body)
         x, new_caches = scan_apply(cfg, body, x, (params["blocks"], caches),
@@ -219,7 +232,7 @@ def backbone_apply(cfg, params, x, *, positions, caches=None, cur_pos=None,
             def inner(h2, xs2):
                 p_l, st_l = xs2
                 h3, new_st = _mamba_block_apply(cfg, p_l, _boundary(cfg, h2),
-                                                state=st_l)
+                                                state=st_l, active=active)
                 return h3, new_st
             h, new_sts = scan_apply(cfg, inner, h, (p_sup, st_sup),
                                     cfg.attn_every)
@@ -227,7 +240,7 @@ def backbone_apply(cfg, params, x, *, positions, caches=None, cur_pos=None,
             h, new_attn_cache, _ = _attn_block_apply(
                 cfg, shared_p, h, positions=positions, cache=attn_cache,
                 cur_pos=cur_pos, window=window, decode=decode,
-                window_gather=window_gather)
+                window_gather=window_gather, paging=paging)
             return h, (new_sts, new_attn_cache)
         super_body = _maybe_remat(cfg, super_body)
 
@@ -248,7 +261,8 @@ def backbone_apply(cfg, params, x, *, positions, caches=None, cur_pos=None,
         h2, new_c, a = _attn_block_apply(
             cfg, p_l, _boundary(cfg, h), positions=positions, cache=c_l,
             cur_pos=cur_pos, window=window, decode=decode,
-            window_gather=window_gather, gather_experts=gather_experts)
+            window_gather=window_gather, gather_experts=gather_experts,
+            paging=paging)
         return (h2, aux + a), new_c
     body = _maybe_remat(cfg, body)
 

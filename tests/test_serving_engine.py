@@ -232,6 +232,168 @@ def test_scheduler_validation():
         srv.submit(np.zeros(0, np.int32), 4)
 
 
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_continuous_churn_ledger_byte_identity(temperature):
+    """ISSUE acceptance: under slot churn (staggered admits, unequal
+    lengths, greedy and sampled) every request's ledger is BYTE-IDENTICAL
+    to its solo fed.decode ledger — the same ordered Message sequence,
+    not just equal totals — and its tokens are bitwise-equal."""
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 12)
+    params = fed.params_from_global(gp)
+    srv = fed.serve(params, max_batch=2, temperature=temperature)
+    specs = [(4, 8), (3, 5), (6, 6), (2, 3)]
+    reqs = []
+    for i, (pl, gl) in enumerate(specs):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 20 + i), (pl,), 0, cfg.vocab_size))
+        k = jax.random.fold_in(key, 200 + i)
+        srv.submit(prompt, gl, key=k)
+        reqs.append((prompt, gl, k))
+    results = srv.run()
+    for (prompt, gl, k), res in zip(reqs, results):
+        solo = fed.decode(params, prompt[None], gen_len=gl,
+                          temperature=temperature, key=k)
+        np.testing.assert_array_equal(res.tokens, solo.tokens[0])
+        assert res.ledger.messages == solo.ledger.messages
+    assert results[2].admitted_at > 0        # admitted mid-flight
+
+
+@pytest.mark.parametrize("family", ["ssm", "hybrid"])
+def test_continuous_matches_solo_recurrent_families(family):
+    """Paged KV + frozen slot-stacked recurrent state: the continuous
+    engine stays bitwise-solo-equal for the SSM and hybrid cache
+    families too (their state must freeze exactly while a retired slot
+    rides along in the batch). The first two requests share a prompt
+    length, so the drain opens with a width-2 batched admission wave —
+    pinning wave-prefill row stability on these families as well."""
+    cfg = ARCH_CFGS[family]()
+    fed, model, gp, key = _build(cfg, 10)
+    params = fed.params_from_global(gp)
+    srv = fed.serve(params, max_batch=2, temperature=0.8)
+    specs = [(4, 6), (4, 4), (3, 4), (2, 3)]
+    reqs = []
+    for i, (pl, gl) in enumerate(specs):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 30 + i), (pl,), 0, cfg.vocab_size))
+        k = jax.random.fold_in(key, 300 + i)
+        srv.submit(prompt, gl, key=k)
+        reqs.append((prompt, gl, k))
+    for (prompt, gl, k), res in zip(reqs, srv.run()):
+        solo = fed.decode(params, prompt[None], gen_len=gl,
+                          temperature=0.8, key=k)
+        np.testing.assert_array_equal(res.tokens, solo.tokens[0])
+        assert res.ledger.messages == solo.ledger.messages
+
+
+def test_wave_admission_bitwise_solo_under_sampling():
+    """Equal-length prompts admit as one (w, prompt_len) batched wave
+    prefill, and XLA does not GUARANTEE a batched matmul is bitwise
+    row-stable across batch widths — low-bit logit drift would sample
+    different tokens than a solo decode at temperature > 0. Row
+    stability is an empirical backend property the scheduler's
+    bitwise-solo contract leans on (same status as scan == eager loop
+    and split == global); this pins it on a KV-cache family at sampling
+    temperature, where low-bit drift is actually visible. The greedy
+    width>1 tests would not catch it."""
+    cfg = reduced(get_config("granite-20b"))
+    fed, model, gp, key = _build(cfg, 10)
+    params = fed.params_from_global(gp)
+    srv = fed.serve(params, max_batch=2, temperature=0.8)
+    pl, gl = 4, 6
+    reqs = []
+    for i in range(4):                  # equal lengths -> width-2 waves
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 40 + i), (pl,), 0, cfg.vocab_size))
+        k = jax.random.fold_in(key, 400 + i)
+        srv.submit(prompt, gl, key=k)
+        reqs.append((prompt, k))
+    results = srv.run()
+    assert results[1].admitted_at == 0   # proves a width-2 wave happened
+    for (prompt, k), res in zip(reqs, results):
+        solo = fed.decode(params, prompt[None], gen_len=gl,
+                          temperature=0.8, key=k)
+        np.testing.assert_array_equal(res.tokens, solo.tokens[0])
+        assert res.ledger.messages == solo.ledger.messages
+
+
+def test_retirement_fetch_is_per_wave_not_per_step():
+    """ISSUE acceptance (regression): a churn-heavy drain issues O(requests)
+    device->host transfers, not O(steps) — retirements fetch one batched
+    wave, never per token."""
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 10)
+    srv = fed.serve(fed.params_from_global(gp), max_batch=2)
+    n_req, gl = 4, 8
+    for i in range(n_req):
+        srv.submit(np.full(2, i, np.int32), gl)
+    results = srv.run()
+    assert len(results) == n_req
+    assert srv.generated_tokens == n_req * gl
+    # equal lengths -> both slots retire together: one wave per admission
+    # round, and never more waves than requests
+    assert srv.host_transfers == n_req // 2
+    assert srv.host_transfers <= n_req < srv.generated_tokens
+
+
+def test_paged_memory_tracks_lengths_in_flight():
+    """ISSUE acceptance: peak slot-cache memory scales with the pages
+    requests actually touch, not max_batch x seq_len — short requests on
+    a long-seq scheduler leave most of the pool untouched."""
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 16)
+    srv = fed.serve(fed.params_from_global(gp), max_batch=4)
+    assert srv.page_size == 8 and srv.pages_per_seq == 2
+    for i in range(4):
+        srv.submit(np.full(3, i, np.int32), 4)   # 7 tokens -> 1 page each
+    srv.run()
+    worst = srv.max_batch * srv.pages_per_seq    # dense-equivalent: 8 pages
+    assert srv.allocator.peak_in_use == 4 < worst
+    assert srv.allocator.in_use == 0             # all freed at retirement
+
+
+def test_small_pool_gates_admission_on_pages():
+    """An undersized pool admission-gates on free pages (FIFO) instead of
+    free slots: requests still drain in order, tokens stay solo-equal."""
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 12)
+    params = fed.params_from_global(gp)
+    # capacity 2 pages = ONE 12-token request at a time, despite 2 slots
+    srv = fed.serve(params, max_batch=2, n_pages=4)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 40 + i), (4,), 0, cfg.vocab_size))
+        for i in range(3)]
+    for p in prompts:
+        srv.submit(p, 7)                         # 11 tokens -> 2 pages
+    results = srv.run()
+    for p, res in zip(prompts, results):
+        solo = fed.decode(params, p[None], gen_len=7)
+        np.testing.assert_array_equal(res.tokens, solo.tokens[0])
+    assert results[1].admitted_at > 0            # waited for pages
+    assert srv.allocator.peak_in_use == 2        # never two in flight
+    with pytest.raises(ValueError, match="pages"):
+        fed.serve(params, max_batch=1, n_pages=3).submit(
+            np.zeros(5, np.int32), 7)            # 2 pages > capacity 1
+
+
+def test_sig_memo_skips_tree_reflatten():
+    """The AOT-cache signature memoizes big containers: a repeated lookup
+    with the same live params tree must not re-flatten it."""
+    from repro.federation import serving
+    tree = {"w": jnp.zeros((8, 8)), "sub": {"b": jnp.ones((3,))}}
+    before = dict(serving._SIG_STATS)
+    sig1 = serving._sig((tree, 3))
+    sig2 = serving._sig((tree, 3))
+    assert sig1 == sig2
+    assert serving._SIG_STATS["flattens"] == before["flattens"] + 1
+    assert serving._SIG_STATS["memo_hits"] == before["memo_hits"] + 1
+    # a structurally-equal DIFFERENT tree re-flattens but yields an equal
+    # signature — executables still shared across fresh-but-equal trees
+    tree2 = {"w": jnp.zeros((8, 8)), "sub": {"b": jnp.ones((3,))}}
+    assert serving._sig((tree2, 3)) == sig1
+    assert serving._SIG_STATS["flattens"] == before["flattens"] + 2
+
+
 # ------------------------------------------------- DP subsampling ---------
 
 def test_subsample_one_is_identity():
