@@ -3,7 +3,6 @@
     PYTHONPATH=src python -m benchmarks.fill_experiments
 """
 import os
-import re
 
 from benchmarks.report import dryrun_table, load, roofline_table, sort_key
 

@@ -31,7 +31,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 ROWS = []
 

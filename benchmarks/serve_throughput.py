@@ -186,6 +186,43 @@ def bench_serve_throughput(fast: bool = True, row=None, out=DEFAULT_OUT):
     record("continuous_churn", srv_churn.last_run_s,
            [r.ledger for r in cres_churn], total_tokens)
 
+    # ------------------- hygiene: sentinel over the steady-state loop ---
+    # a warmed scheduler's block-stepping between admission and
+    # retirement must touch the host ZERO times: no device->host fetch,
+    # no retrace. The sentinel measures, the bench asserts — the same
+    # instrumentation tests/test_analysis.py pins in CI.
+    from repro.analysis import runtime as hygiene
+    srv_h = fed.serve(params, max_batch=n_req)
+    for i in range(n_req):
+        srv_h.submit(prompts[i], GL)
+    srv_h.run()                       # warm: compiles the whole pow2 ladder
+    for i in range(n_req):
+        srv_h.submit(prompts[i], GL)
+    srv_h._admit_free_slots()
+
+    def _occupied():
+        return [s for s in range(srv_h.max_batch)
+                if srv_h._slot_req[s] is not None]
+    with hygiene.strict(check=False) as steady:
+        while _occupied() and min(srv_h._remaining[s]
+                                  for s in _occupied()) > 0:
+            srv_h._block_step()
+    srv_h._retire_wave()
+    transfers_before = srv_h.host_transfers
+    # count-mode over a whole warm drain: the only d2h events are the
+    # per-wave retirement fetch (mirrored by scheduler.host_transfers)
+    # and the per-request key_data read at admission
+    for i in range(n_req):
+        srv_h.submit(prompts[i], GL)
+    with hygiene.strict(check=False) as whole:
+        srv_h.run()
+    waves = srv_h.host_transfers - transfers_before
+    hygiene_ok = (steady.d2h == 0 and steady.compiles == 0
+                  and whole.compiles == 0
+                  and whole.d2h == waves + n_req)
+    assert steady.d2h == 0, steady.d2h_sites
+    assert steady.compiles == 0, steady.compiled_names
+
     # ------------------------- paged memory: short requests, same pool --
     # worst case (above) fills every slot to seq_len; a short-request mix
     # must leave most of the page pool untouched — peak pages tracks the
@@ -247,6 +284,14 @@ def bench_serve_throughput(fast: bool = True, row=None, out=DEFAULT_OUT):
                 "peak_pages": srv_short.allocator.peak_in_use},
             "host_transfers_churn": srv_churn.host_transfers,
             "decode_steps_churn": srv_churn.steps,
+        },
+        "hygiene": {
+            "steady_state_d2h": steady.d2h,
+            "steady_state_retraces": steady.compiles,
+            "warm_drain_d2h": whole.d2h,
+            "warm_drain_retraces": whole.compiles,
+            "retirement_waves": waves,
+            "d2h_matches_waves_plus_keys": hygiene_ok,
         },
         "split_equals_global": split_equals_global,
         "all_paths_same_tokens": paths_agree,

@@ -15,7 +15,6 @@ plugs a Gaussian DP channel into the loss downlink. Presets:
     PYTHONPATH=src python examples/train_lm_cascaded.py --preset small
 """
 import argparse
-import dataclasses
 import json
 
 from repro.configs import ARCH_REGISTRY, ModelConfig

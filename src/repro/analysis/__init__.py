@@ -1,0 +1,16 @@
+"""Static + runtime analysis plane for the federated repro.
+
+- ``analysis.tags`` — annotation registry (party / wire / accounting /
+  hot_loop / host_boundary decorators) the static passes read off the AST.
+- ``analysis.boundary`` — party-boundary leak rules (PB1xx).
+- ``analysis.jitlint`` — trace-hygiene rules (TH2xx).
+- ``analysis.runtime`` — device-transfer + recompile sentinels and the
+  ``strict()`` context manager (imports jax; everything else is pure AST).
+- ``python -m repro.analysis src/repro --strict`` — the CI gate.
+"""
+
+from repro.analysis import tags
+from repro.analysis.cli import analyze_paths
+from repro.analysis.findings import Finding
+
+__all__ = ["Finding", "analyze_paths", "tags"]

@@ -1,0 +1,133 @@
+"""``python -m repro.analysis`` — run the boundary + trace-hygiene passes.
+
+Exit status: 0 when no (unbaselined) findings, 1 otherwise. ``--strict``
+ignores any baseline so only a clean tree passes; without it, findings
+already recorded in ``--baseline`` are tolerated and only *new* ones fail
+the run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import sys
+
+from repro.analysis import boundary, jitlint
+from repro.analysis.findings import Finding, apply_suppressions, scan_suppressions
+
+RULES = {
+    "PB101": "undeclared client->server value flow",
+    "PB102": "gradient-typed value flowing client-ward without a declared wire",
+    "PB103": "raw client features inside server-party code",
+    "PB104": "wire declaration with unknown/unmetered accounted_by target",
+    "PB105": "server losses reach a ZOO estimator bypassing Transport.downlink",
+    "TH201": "host sync / per-step upload in serve-plane hot code",
+    "TH202": "Python branch on a traced value",
+    "TH203": "dtype-unstable scan carry (literal astype)",
+    "TH204": "leftover debug instrumentation",
+    "BA001": "suppression comment without justification",
+    "BA002": "unparseable file (syntax error)",
+}
+
+
+def iter_python_files(paths: list[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d != "__pycache__")
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.append(os.path.join(root, f))
+    return out
+
+
+def analyze_paths(paths: list[str]) -> list[Finding]:
+    """Parse every .py under ``paths`` and run both passes."""
+    files = iter_python_files(paths)
+    trees: dict[str, ast.Module] = {}
+    sources: dict[str, str] = {}
+    findings: list[Finding] = []
+    for path in files:
+        with open(path, "r", encoding="utf-8") as fh:
+            src = fh.read()
+        try:
+            trees[path] = ast.parse(src, filename=path)
+            sources[path] = src
+        except SyntaxError as exc:
+            findings.append(
+                Finding("BA002", path, exc.lineno or 1, f"syntax error: {exc.msg}")
+            )
+    accounting = boundary.collect_accounting(trees)
+    for path, tree in trees.items():
+        raw = boundary.check_module(path, tree, accounting)
+        raw += jitlint.check_module(path, tree)
+        findings += apply_suppressions(raw, scan_suppressions(sources[path]), path)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def load_baseline(path: str) -> set[str]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return set(json.load(fh))
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis", description=__doc__
+    )
+    parser.add_argument("paths", nargs="*", default=["src/repro"])
+    parser.add_argument(
+        "--strict",
+        action="store_true",
+        help="ignore the baseline: any finding fails the run",
+    )
+    parser.add_argument("--baseline", help="JSON baseline of tolerated finding keys")
+    parser.add_argument(
+        "--write-baseline",
+        help="write current findings to this path as the new baseline and exit 0",
+    )
+    parser.add_argument("--json", action="store_true", help="machine-readable output")
+    args = parser.parse_args(argv)
+
+    findings = analyze_paths(args.paths or ["src/repro"])
+
+    if args.write_baseline:
+        with open(args.write_baseline, "w", encoding="utf-8") as fh:
+            json.dump(sorted(f.key() for f in findings), fh, indent=2)
+        print(f"wrote {len(findings)} finding(s) to {args.write_baseline}")
+        return 0
+
+    if args.baseline and not args.strict:
+        tolerated = load_baseline(args.baseline)
+        findings = [f for f in findings if f.key() not in tolerated]
+
+    if args.json:
+        print(
+            json.dumps(
+                [dataclass_dict(f) for f in findings], indent=2, sort_keys=True
+            )
+        )
+    else:
+        for f in findings:
+            print(f.render())
+        if findings:
+            counts: dict[str, int] = {}
+            for f in findings:
+                counts[f.rule] = counts.get(f.rule, 0) + 1
+            summary = ", ".join(f"{r} x{n}" for r, n in sorted(counts.items()))
+            print(f"\n{len(findings)} finding(s): {summary}", file=sys.stderr)
+        else:
+            print("analysis clean: no findings", file=sys.stderr)
+    return 1 if findings else 0
+
+
+def dataclass_dict(f: Finding) -> dict[str, object]:
+    return {"rule": f.rule, "path": f.path, "line": f.line, "message": f.message}
+
+
+if __name__ == "__main__":
+    sys.exit(main())

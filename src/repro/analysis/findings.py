@@ -1,0 +1,79 @@
+"""Finding record + inline-suppression handling shared by both passes."""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# ``# analysis: ignore[PB101] reason...`` — reason is mandatory (BA001).
+_SUPPRESS_RE = re.compile(
+    r"#\s*analysis:\s*ignore\[(?P<rules>[A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)\]"
+    r"(?P<reason>.*)$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def key(self) -> str:
+        """Stable identity for baseline matching (line numbers drift)."""
+        return f"{self.rule}:{self.path}:{self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int
+    rules: tuple[str, ...]
+    reason: str
+
+
+def scan_suppressions(source: str) -> list[Suppression]:
+    out = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if m is not None:
+            rules = tuple(r.strip() for r in m.group("rules").split(","))
+            out.append(Suppression(i, rules, m.group("reason").strip()))
+    return out
+
+
+def apply_suppressions(
+    findings: list[Finding], suppressions: list[Suppression], path: str
+) -> list[Finding]:
+    """Drop findings covered by a justified inline suppression.
+
+    A suppression on line N covers findings on lines N and N+1 (comment
+    above the offending statement or trailing on the same line). An
+    unjustified suppression (empty reason) is converted into a BA001
+    finding instead of taking effect.
+    """
+    kept: list[Finding] = []
+    for sup in suppressions:
+        if not sup.reason:
+            kept.append(
+                Finding(
+                    "BA001",
+                    path,
+                    sup.line,
+                    "suppression without justification: every "
+                    "`# analysis: ignore[...]` must carry a reason",
+                )
+            )
+    covered = {
+        (line, rule)
+        for sup in suppressions
+        if sup.reason
+        for rule in sup.rules
+        for line in (sup.line, sup.line + 1)
+    }
+    for f in findings:
+        if (f.line, f.rule) not in covered:
+            kept.append(f)
+    return sorted(kept, key=lambda f: (f.path, f.line, f.rule))

@@ -1,0 +1,395 @@
+"""Trace-hygiene rules (TH2xx).
+
+TH201  host sync / device upload in serve-plane hot code: ``np.asarray``,
+       ``.item()``, ``.tolist()``, ``block_until_ready`` inside
+       for/while loops of the hot modules (scheduler.py, serving.py,
+       launch/serve.py), and — in ``@tags.hot_loop`` bodies — anywhere,
+       plus ``float()/int()/bool()`` coercions and per-step
+       ``jnp.asarray``/``device_put`` uploads.
+TH202  Python branch (``if``/``while``/ternary) on a traced value inside
+       a jit/scan/vmap-traced function. Shape/dtype/None checks are
+       static and stay legal.
+TH203  dtype-unstable scan carry: ``.astype(<literal dtype>)`` inside a
+       ``lax.scan`` body. Anchor to a runtime dtype (``x.dtype``) instead —
+       a literal flips the carry dtype when inputs arrive in another
+       precision and forces a silent retrace every call (PR 5's
+       ``_causal_conv`` bug).
+TH204  leftover debug instrumentation: ``jax.debug.*`` anywhere,
+       ``print``/``breakpoint`` inside traced functions.
+"""
+
+from __future__ import annotations
+
+import ast
+import typing
+
+from repro.analysis import tags
+from repro.analysis.astutil import (
+    FuncInfo,
+    attr_of_call,
+    call_name,
+    dotted,
+    index_functions,
+)
+from repro.analysis.findings import Finding
+
+_TRACING_TRANSFORMS = frozenset(
+    {"scan", "jit", "vmap", "pmap", "cond", "while_loop", "fori_loop", "shard_map"}
+)
+_SCAN_LIKE = frozenset({"scan"})
+_STATIC_ATTRS = frozenset(
+    {"shape", "ndim", "dtype", "size", "itemsize", "sharding", "aval", "weak_type"}
+)
+_STATIC_CALLS = frozenset({"isinstance", "len", "hasattr", "callable", "getattr", "type"})
+
+
+def _callee_function_names(call: ast.Call) -> list[str]:
+    """Local function names a tracing transform is applied to.
+
+    Handles ``lax.scan(body, ...)``, ``jax.jit(step)``, and
+    ``scan(functools.partial(body, x), ...)``.
+    """
+    if not call.args:
+        return []
+    target = call.args[0]
+    if isinstance(target, ast.Call) and (call_name(target) or "").endswith("partial"):
+        target = target.args[0] if target.args else target
+    name = dotted(target)
+    return [name] if name else []
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    out: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+    return out
+
+
+class _TracedInfo(typing.NamedTuple):
+    kinds: set[str]
+    static_names: set[str]
+
+
+def find_traced(tree: ast.Module, funcs: list[FuncInfo]) -> dict[str, _TracedInfo]:
+    """Map local function name -> tracing context it is lowered under."""
+    traced: dict[str, _TracedInfo] = {}
+
+    def mark(name: str, kind: str, call: ast.Call | None) -> None:
+        info = traced.setdefault(name, _TracedInfo(set(), set()))
+        info.kinds.add(kind)
+        if call is not None:
+            info.static_names.update(_static_argnames(call))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            leaf = attr_of_call(node)
+            if leaf in _TRACING_TRANSFORMS:
+                for name in _callee_function_names(node):
+                    mark(name.rsplit(".", 1)[-1], leaf, node)
+    for fi in funcs:
+        for deco in fi.node.decorator_list:
+            target = deco.func if isinstance(deco, ast.Call) else deco
+            name = dotted(target) or ""
+            if name.rsplit(".", 1)[-1] == "jit" or name.endswith("jit"):
+                mark(fi.node.name, "jit", deco if isinstance(deco, ast.Call) else None)
+    return traced
+
+
+def _body_statements(
+    fn: ast.FunctionDef | ast.AsyncFunctionDef,
+) -> typing.Iterator[ast.stmt]:
+    stack: list[ast.stmt] = list(reversed(fn.body))
+    while stack:
+        stmt = stack.pop()
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        yield stmt
+        children: list[ast.stmt] = []
+        for field in ("body", "orelse", "finalbody"):
+            children.extend(getattr(stmt, field, []) or [])
+        for handler in getattr(stmt, "handlers", []) or []:
+            children.extend(handler.body)
+        stack.extend(reversed(children))
+
+
+def _walk_no_nested_defs(stmts: typing.Iterable[ast.stmt]) -> typing.Iterator[ast.AST]:
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        stack: list[ast.AST] = [stmt]
+        while stack:
+            node = stack.pop()
+            yield node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+
+
+# ---------------------------------------------------------------------------
+# TH201 — host syncs / uploads in hot code
+# ---------------------------------------------------------------------------
+
+
+def _host_sync_kind(node: ast.Call, *, in_hot_loop: bool) -> str | None:
+    name = call_name(node)
+    leaf = attr_of_call(node)
+    if name in tags.HOST_SYNC_FUNCS:
+        return f"device->host `{name}`"
+    if isinstance(node.func, ast.Attribute) and leaf in tags.HOST_SYNC_METHODS:
+        return f"device->host `.{leaf}()`"
+    if in_hot_loop:
+        if (
+            isinstance(node.func, ast.Name)
+            and node.func.id in tags.HOST_SYNC_BUILTINS
+            and node.args
+            and not isinstance(node.args[0], ast.Constant)
+        ):
+            return f"device->host `{node.func.id}()` coercion"
+        if name in tags.DEVICE_PUT_FUNCS:
+            return f"per-step host->device upload `{name}`"
+    return None
+
+
+def _check_host_syncs(
+    fi: FuncInfo, path: str, hot_module: bool, findings: list[Finding]
+) -> None:
+    hot_tags = [t for t in fi.chain_tags()]
+    if any(t.host_boundary for t in hot_tags):
+        return
+    is_hot_loop = any(t.hot_loop for t in hot_tags)
+
+    def flag(call: ast.Call, kind: str, where: str) -> None:
+        findings.append(
+            Finding(
+                "TH201",
+                path,
+                call.lineno,
+                f"{kind} {where} — steady-state decode must stay on device "
+                "(hoist out of the loop, batch per wave, or mark a "
+                "@tags.host_boundary with justification)",
+            )
+        )
+
+    if is_hot_loop:
+        for node in _walk_no_nested_defs(fi.node.body):
+            if isinstance(node, ast.Call):
+                kind = _host_sync_kind(node, in_hot_loop=True)
+                if kind:
+                    flag(node, kind, "in a @tags.hot_loop body")
+        return
+    if hot_module:
+        for stmt in _body_statements(fi.node):
+            if isinstance(stmt, (ast.For, ast.While)):
+                for node in _walk_no_nested_defs(stmt.body + stmt.orelse):
+                    if isinstance(node, ast.Call):
+                        kind = _host_sync_kind(node, in_hot_loop=False)
+                        if kind:
+                            flag(node, kind, "inside a serve-plane loop")
+
+
+# ---------------------------------------------------------------------------
+# TH202 — Python branching on traced values
+# ---------------------------------------------------------------------------
+
+
+def _static_occurrence_ids(cond: ast.AST) -> set[int]:
+    ok: set[int] = set()
+    for n in ast.walk(cond):
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            ok.update(id(x) for x in ast.walk(n))
+        elif isinstance(n, ast.Call):
+            leaf = attr_of_call(n)
+            if leaf in _STATIC_CALLS:
+                ok.update(id(x) for x in ast.walk(n))
+        elif isinstance(n, ast.Compare) and any(
+            isinstance(c, ast.Constant) and c.value is None for c in n.comparators
+        ):
+            ok.update(id(x) for x in ast.walk(n))
+    return ok
+
+
+def _tainted_occurrence(node: ast.AST, tainted: set[str]) -> ast.Name | None:
+    static = _static_occurrence_ids(node)
+    for n in ast.walk(node):
+        if (
+            isinstance(n, ast.Name)
+            and isinstance(n.ctx, ast.Load)
+            and n.id in tainted
+            and id(n) not in static
+        ):
+            return n
+    return None
+
+
+def _check_traced_branches(
+    fi: FuncInfo, path: str, info: _TracedInfo, findings: list[Finding]
+) -> None:
+    args = fi.node.args
+    params = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    tainted = {p for p in params if p not in info.static_names and p != "self"}
+
+    for stmt in _body_statements(fi.node):
+        value = getattr(stmt, "value", None)
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)) and value is not None:
+            if _tainted_occurrence(value, tainted) is not None:
+                for t in ast.walk(stmt):
+                    if isinstance(t, ast.Name) and isinstance(t.ctx, ast.Store):
+                        tainted.add(t.id)
+        conds: list[ast.expr] = []
+        if isinstance(stmt, (ast.If, ast.While)):
+            conds.append(stmt.test)
+        if isinstance(stmt, ast.Assert):
+            conds.append(stmt.test)
+        for node in _walk_no_nested_defs([stmt]):
+            if isinstance(node, ast.IfExp):
+                conds.append(node.test)
+        for cond in conds:
+            hit = _tainted_occurrence(cond, tainted)
+            if hit is not None:
+                findings.append(
+                    Finding(
+                        "TH202",
+                        path,
+                        cond.lineno,
+                        f"Python branch on traced value `{hit.id}` inside a "
+                        f"{'/'.join(sorted(info.kinds))}-traced function — "
+                        "use lax.cond/jnp.where or hoist to a static argument",
+                    )
+                )
+
+
+# ---------------------------------------------------------------------------
+# TH203 — dtype-unstable scan carries
+# ---------------------------------------------------------------------------
+
+
+def _literal_astypes(node: ast.AST) -> typing.Iterator[ast.Call]:
+    """``.astype(X)`` calls where X is not anchored to a runtime ``.dtype``."""
+    for n in ast.walk(node):
+        if (
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "astype"
+            and n.args
+        ):
+            arg = n.args[0]
+            if not (isinstance(arg, ast.Attribute) and arg.attr == "dtype"):
+                yield n
+
+
+def _check_scan_carry_dtype(
+    fi: FuncInfo, path: str, info: _TracedInfo, findings: list[Finding]
+) -> None:
+    """Literal casts are fine on xs/outputs (f32 accumulation); they are a
+    retrace hazard only when they (re)define a carry element, whose dtype
+    must be invariant across iterations."""
+    if not (info.kinds & _SCAN_LIKE):
+        return
+    args = fi.node.args
+    params = [a.arg for a in args.posonlyargs + args.args]
+    carry_names: set[str] = {params[0]} if params else set()
+    for stmt in _body_statements(fi.node):
+        if (
+            isinstance(stmt, ast.Assign)
+            and isinstance(stmt.value, ast.Name)
+            and stmt.value.id in carry_names
+        ):
+            for t in stmt.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                        carry_names.add(n.id)
+
+    def flag(call: ast.Call) -> None:
+        findings.append(
+            Finding(
+                "TH203",
+                path,
+                call.lineno,
+                "literal-dtype `.astype(...)` feeding a scan carry — anchor "
+                "to the carry's runtime dtype (`.astype(x.dtype)`) so the "
+                "carry dtype cannot flip between trace and steady state "
+                "and force a silent retrace",
+            )
+        )
+
+    for stmt in _body_statements(fi.node):
+        targets: set[str] = set()
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                        targets.add(n.id)
+        elif isinstance(stmt, ast.AugAssign) and isinstance(stmt.target, ast.Name):
+            targets.add(stmt.target.id)
+        value = getattr(stmt, "value", None)
+        if targets & carry_names and value is not None:
+            for call in _literal_astypes(value):
+                flag(call)
+        if (
+            isinstance(stmt, ast.Return)
+            and isinstance(stmt.value, ast.Tuple)
+            and len(stmt.value.elts) >= 2
+        ):
+            for call in _literal_astypes(stmt.value.elts[0]):
+                flag(call)
+
+
+# ---------------------------------------------------------------------------
+# TH204 — leftover debug instrumentation
+# ---------------------------------------------------------------------------
+
+
+def _check_debug_leftovers(
+    tree: ast.Module, path: str, traced: dict[str, _TracedInfo],
+    funcs: list[FuncInfo], findings: list[Finding],
+) -> None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = call_name(node) or ""
+            if name.startswith("jax.debug.") or name.startswith("debug.print"):
+                findings.append(
+                    Finding(
+                        "TH204", path, node.lineno,
+                        f"leftover `{name}` call — remove debug "
+                        "instrumentation before shipping",
+                    )
+                )
+            elif isinstance(node.func, ast.Name) and node.func.id == "breakpoint":
+                findings.append(
+                    Finding("TH204", path, node.lineno, "leftover `breakpoint()` call")
+                )
+    for fi in funcs:
+        if fi.node.name not in traced:
+            continue
+        for node in _walk_no_nested_defs(fi.node.body):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "print"
+            ):
+                findings.append(
+                    Finding(
+                        "TH204", path, node.lineno,
+                        "`print()` inside a traced function — prints once per "
+                        "trace, not per step; use jax.debug.print during "
+                        "development and remove before shipping",
+                    )
+                )
+
+
+def check_module(path: str, tree: ast.Module) -> list[Finding]:
+    findings: list[Finding] = []
+    funcs = index_functions(tree)
+    traced = find_traced(tree, funcs)
+    hot_module = any(path.endswith(m) for m in tags.HOT_MODULES)
+    for fi in funcs:
+        _check_host_syncs(fi, path, hot_module, findings)
+        info = traced.get(fi.node.name)
+        if info is not None:
+            _check_traced_branches(fi, path, info, findings)
+            _check_scan_carry_dtype(fi, path, info, findings)
+    _check_debug_leftovers(tree, path, traced, funcs, findings)
+    return findings

@@ -1,0 +1,247 @@
+"""Runtime sanitizers: device->host transfer sentinel + recompile sentinel.
+
+The static passes prove what the source *says*; these prove what a run
+*does*. ``strict()`` wraps a steady-state region (e.g. the paged-decode
+block loop) and asserts zero device->host transfers and zero fresh XLA
+compiles inside it — turning the scheduler's self-reported
+``host_transfers`` counter into an externally enforced property.
+
+Why not JAX's transfer guard alone: on the CPU backend (this repo's test
+substrate) ``jax.transfer_guard_device_to_host("disallow")`` does not
+intercept host reads — ``np.asarray``/``.item()``/``float()`` on a
+committed CPU array are treated as intra-device copies and sail through.
+So the sentinel instruments ``ArrayImpl``'s Python-level host-read entry
+points directly (``__array__``, ``_value``, ``item``, ...), counting only
+reads that actually materialize a fresh host copy (``_npy_value is None``
+— cached reads are free). The transfer guard is still engaged when the
+backend honors it, so on TPU/GPU the same context manager gets the
+native enforcement for free.
+
+The recompile sentinel listens to ``jax_log_compiles`` logging records
+("Compiling <name> ..." from the dispatch layer) — any fresh lowering
+inside the guarded region is a retrace that the AOT warmup should have
+absorbed.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import logging
+import sys
+import threading
+
+import jax
+
+_PATCH_NAMES = (
+    "__array__",
+    "__bool__",
+    "__float__",
+    "__int__",
+    "__index__",
+    "__iter__",
+    "item",
+    "tolist",
+    "_value",
+)
+
+_state = threading.local()
+
+
+def _caller_site() -> str:
+    """First stack frame outside jax internals and this module."""
+    frame = sys._getframe(2)
+    while frame is not None:
+        fname = frame.f_code.co_filename
+        if "/jax/" not in fname and "/jaxlib/" not in fname and not fname.endswith(
+            "analysis/runtime.py"
+        ):
+            return f"{fname}:{frame.f_lineno}"
+        frame = frame.f_back
+    return "<unknown>"
+
+
+@dataclasses.dataclass
+class SanitizerReport:
+    """Mutable tally filled in while a ``strict()`` region runs."""
+
+    d2h: int = 0
+    compiles: int = 0
+    d2h_sites: dict[str, int] = dataclasses.field(default_factory=dict)
+    compiled_names: list[str] = dataclasses.field(default_factory=list)
+
+    def record_d2h(self, site: str) -> None:
+        self.d2h += 1
+        self.d2h_sites[site] = self.d2h_sites.get(site, 0) + 1
+
+    def record_compile(self, name: str) -> None:
+        self.compiles += 1
+        self.compiled_names.append(name)
+
+    def violations(self, *, max_d2h: int = 0, max_compiles: int = 0) -> list[str]:
+        out = []
+        if self.d2h > max_d2h:
+            sites = ", ".join(
+                f"{site} x{n}" for site, n in sorted(self.d2h_sites.items())
+            )
+            out.append(
+                f"{self.d2h} device->host transfer(s) (allowed {max_d2h}): {sites}"
+            )
+        if self.compiles > max_compiles:
+            names = ", ".join(self.compiled_names)
+            out.append(
+                f"{self.compiles} fresh compile(s) (allowed {max_compiles}): {names}"
+            )
+        return out
+
+
+class StrictModeViolation(AssertionError):
+    """Raised when a strict() region broke its transfer/recompile budget."""
+
+
+# ---------------------------------------------------------------------------
+# device->host sentinel
+# ---------------------------------------------------------------------------
+
+
+# numpy converters that reach a device array through the C-level buffer
+# protocol, invisible to any ArrayImpl method patch — intercepted at the
+# module-attribute level instead (callers look them up at call time).
+_NP_CONVERTERS = ("asarray", "array", "asanyarray", "ascontiguousarray")
+
+
+@contextlib.contextmanager
+def host_transfer_sentinel(report: SanitizerReport):
+    """Count host-materializing reads of device arrays inside the block."""
+    import numpy as np
+    from jax._src import array as _jarray
+
+    cls = _jarray.ArrayImpl
+    originals: dict[str, object] = {}
+    np_originals: dict[str, object] = {}
+
+    def _needs_copy(arr: object) -> bool:
+        return isinstance(arr, cls) and getattr(arr, "_npy_value", True) is None
+
+    def wrap_method(name: str, orig):
+        def patched(self, *args, **kwargs):
+            depth = getattr(_state, "depth", 0)
+            if depth == 0 and _needs_copy(self):
+                report.record_d2h(_caller_site())
+            _state.depth = depth + 1
+            try:
+                return orig(self, *args, **kwargs)
+            finally:
+                _state.depth = depth
+
+        patched.__name__ = name
+        return patched
+
+    def wrap_property(orig_prop: property) -> property:
+        return property(wrap_method("_value", orig_prop.fget))
+
+    def wrap_np(name: str, orig):
+        def patched(a, *args, **kwargs):
+            depth = getattr(_state, "depth", 0)
+            if depth == 0 and _needs_copy(a):
+                report.record_d2h(_caller_site())
+            _state.depth = depth + 1
+            try:
+                return orig(a, *args, **kwargs)
+            finally:
+                _state.depth = depth
+
+        patched.__name__ = name
+        return patched
+
+    for name in _PATCH_NAMES:
+        if name not in cls.__dict__:
+            continue
+        orig = cls.__dict__[name]
+        originals[name] = orig
+        if isinstance(orig, property):
+            setattr(cls, name, wrap_property(orig))
+        else:
+            setattr(cls, name, wrap_method(name, orig))
+    for name in _NP_CONVERTERS:
+        orig = getattr(np, name, None)
+        if orig is not None:
+            np_originals[name] = orig
+            setattr(np, name, wrap_np(name, orig))
+    try:
+        yield report
+    finally:
+        for name, orig in originals.items():
+            setattr(cls, name, orig)
+        for name, orig in np_originals.items():
+            setattr(np, name, orig)
+
+
+# ---------------------------------------------------------------------------
+# recompile sentinel
+# ---------------------------------------------------------------------------
+
+
+class _CompileHandler(logging.Handler):
+    def __init__(self, report: SanitizerReport) -> None:
+        super().__init__(level=logging.DEBUG)
+        self.report = report
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if msg.startswith("Compiling "):
+            self.report.record_compile(msg.split()[1])
+
+
+@contextlib.contextmanager
+def recompile_sentinel(report: SanitizerReport):
+    """Count fresh XLA lowerings inside the block via jax_log_compiles."""
+    handler = _CompileHandler(report)
+    logger = logging.getLogger("jax._src.interpreters.pxla")
+    prev_level = logger.level
+    logger.addHandler(handler)
+    if logger.getEffectiveLevel() > logging.DEBUG:
+        logger.setLevel(logging.DEBUG)
+    with jax.log_compiles(True):
+        try:
+            yield report
+        finally:
+            logger.removeHandler(handler)
+            logger.setLevel(prev_level)
+
+
+# ---------------------------------------------------------------------------
+# strict mode
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def strict(
+    *,
+    max_host_transfers: int = 0,
+    max_compiles: int = 0,
+    check: bool = True,
+    transfer_guard: str | None = None,
+):
+    """Assert a region performs no host transfers and no fresh compiles.
+
+    Yields a :class:`SanitizerReport`; on exit raises
+    :class:`StrictModeViolation` listing offending call sites if any
+    budget was exceeded (set ``check=False`` to only count). Pass
+    ``transfer_guard="disallow"`` to additionally engage JAX's native
+    guard on backends that honor it (TPU/GPU) — it raises at the first
+    transfer instead of tallying, so only combine it with a zero budget.
+    """
+    report = SanitizerReport()
+    with contextlib.ExitStack() as stack:
+        if transfer_guard is not None:
+            stack.enter_context(jax.transfer_guard_device_to_host(transfer_guard))
+        stack.enter_context(host_transfer_sentinel(report))
+        stack.enter_context(recompile_sentinel(report))
+        yield report
+    if check:
+        problems = report.violations(
+            max_d2h=max_host_transfers, max_compiles=max_compiles
+        )
+        if problems:
+            raise StrictModeViolation("; ".join(problems))

@@ -1,16 +1,7 @@
 """Config registry: ``get_config(arch_id)`` / ``--arch`` selection."""
 from __future__ import annotations
 
-from repro.configs.base import (
-    INPUT_SHAPES,
-    ModelConfig,
-    ShapeConfig,
-    TrainConfig,
-    VFLConfig,
-    reduced,
-)
-
-from repro.configs import (  # noqa: E402
+from repro.configs import (
     deepseek_v3_671b,
     granite_20b,
     internlm2_20b,
@@ -22,6 +13,15 @@ from repro.configs import (  # noqa: E402
     rwkv6_7b,
     whisper_medium,
     zamba2_2p7b,
+)
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+    VFLConfig,
+    reduced,
 )
 
 ARCH_REGISTRY: dict[str, ModelConfig] = {

@@ -23,6 +23,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import tags
 from repro.configs.base import ModelConfig
 from repro.configs.paper_mlp import PaperMLPConfig
 from repro.core import zoo
@@ -91,6 +92,10 @@ class ModelAdapter:
     def init_params(self, key):
         return common.materialize(self.param_specs(), key)
 
+    @tags.wire("up", accounted_by="Transport.account", kind="embedding",
+               reason="Split-Learning oracle: fresh client embeddings "
+                      "uploaded every step; the sync cascade meters it "
+                      "per round")
     def global_loss(self, params, x_parts, y_batch):
         """Synchronous view: every client fresh, one loss (Split-Learning)."""
         c = jax.vmap(self.client_forward)(params["clients"], x_parts)
@@ -117,9 +122,11 @@ def tabular_adapter(cfg: Optional[PaperMLPConfig] = None,
     """
     cfg = cfg or PaperMLPConfig()
 
+    @tags.party("server")
     def server_loss(server, c_all, y_batch):
         return tabular.xent(tabular.server_forward(server, c_all), y_batch)
 
+    @tags.party("client")
     def client_lanes(client_m, u_stack, mu, x_m):
         w, b = client_m["w"], client_m["b"]
         if use_pallas_lanes:
@@ -183,10 +190,12 @@ def mlp_adapter(*, n_clients: int = 4, features: int = 32,
         return h * jax.lax.rsqrt(jnp.mean(jnp.square(h), -1,
                                           keepdims=True) + 1e-6)
 
+    @tags.party("client")
     def client_forward(client_m, x_m):
         h = _rms(x_m @ client_m["w_in"])
         return _rms(h + mlp.mlp_apply(acfg, client_m["mlp"], h[:, None, :])[:, 0])
 
+    @tags.party("server")
     def server_loss(server, c_all, y_batch):
         M, B, _ = c_all.shape
         h = _rms(c_all.transpose(1, 0, 2).reshape(B, M * e) @ server["w_in"])
@@ -259,11 +268,13 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
     span = seq_len // n_clients
     d = cfg.d_model
 
+    @tags.party("client")
     def client_forward(client_m, x_m):
         """x_m: (bs, span) int32 token slice -> (bs, span·d) embedding."""
         e = embed_lookup(client_m["embed"], x_m, iota=cfg.iota_embed)
         return e.reshape(x_m.shape[0], span * d)
 
+    @tags.party("client")
     def client_lanes(client_m, u_stack, mu, x_m):
         """Fused clean + q perturbed fan-out. Embedding lookup is linear
         in the table, so the q perturbed forwards are one gather into the
@@ -278,6 +289,7 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
                                       span * d)).astype(clean.dtype)
         return jnp.concatenate([clean[None], pert], axis=0)
 
+    @tags.party("server")
     def server_loss(server, c_all, y_batch):
         """c_all: (M, bs, span·d) client spans -> scalar LM loss.
 
@@ -319,6 +331,7 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
     # the exact post-embedding half of ``transformer.forward``'s decode
     # path, so split decode is bitwise-equal to global decode.
 
+    @tags.party("client")
     def client_embed(client_m, tokens):
         """tokens (bs, S) int32 -> (bs, S, d) — the serve-time uplink.
         S=1 per decode step; S=chunk for a whole prompt span (chunked
@@ -341,10 +354,12 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
         logits = shard_constraint(logits, ("batch", None, "vocab_act"))
         return logits, new_caches
 
+    @tags.party("server")
     def server_decode(server, x, caches, cur_pos):
         return _decode_tail(server, x, caches, cur_pos,
                             jnp.asarray(cur_pos)[None])
 
+    @tags.party("server")
     def server_prefill(server, x, caches, t0):
         """x (bs, chunk, d): one party's whole span upload, consumed in a
         single compiled pass — same post-embedding ops as ``server_decode``
@@ -353,6 +368,7 @@ def from_model_config(cfg: ModelConfig, *, n_clients: int = 2,
         positions = jnp.asarray(t0) + jnp.arange(x.shape[1])
         return _decode_tail(server, x, caches, t0, positions)
 
+    @tags.party("server")
     def server_decode_paged(server, x, caches, tables, cur_pos, active,
                             page_size):
         """Batched paged decode: x (n_slots, 1, d) — every slot advances

@@ -65,6 +65,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis import tags
 from repro.configs.base import VFLConfig
 from repro.core import zoo
 from repro.core.adapters import ModelAdapter, tabular_adapter
@@ -303,6 +304,9 @@ def _make_client_grad_fns(adapter: ModelAdapter, transport,
         return (adapter.row_mask(client_m, x_m)
                 if adapter.row_mask is not None else None)
 
+    @tags.wire("up", accounted_by="Transport.account", kind="embedding",
+               reason="ZOO uplink: clean + q perturbed embeddings; the "
+                      "loss downlink is sanitized via transport.downlink")
     def client_zoo_grad(server, c_stale, m, client_m, x_m, yb, key):
         """ZOO (ours / zoo-vfl): only losses cross the wire."""
         mask = _row_mask(client_m, x_m)
@@ -342,6 +346,13 @@ def _make_client_grad_fns(adapter: ModelAdapter, transport,
         return zoo.grad_from_losses(u_stack, losses[1:], losses[0],
                                     vfl.mu, phi)
 
+    @tags.wire("up", accounted_by="Transport.account", kind="embedding",
+               reason="FOO uplink: one clean embedding per round")
+    @tags.wire("down", accounted_by="Transport.account",
+               kind="partial_derivative",
+               reason="VAFL baseline is DECLARED leaky: the server returns "
+                      "dL/dc_m and the ledger reports "
+                      "transmits_gradients=True for it (paper §V contrast)")
     def client_foo_grad(server, c_stale, m, client_m, x_m, yb):
         """VAFL (privacy-leaky): server sends ∂L/∂c_m; client backprops."""
         def c_loss(cm):

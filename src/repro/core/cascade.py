@@ -17,7 +17,7 @@ the server cannot form ∂L/∂w_m because it does not know F_m.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,7 +126,10 @@ def make_cascaded_step(loss_fn: Callable, client_keys: Tuple[str, ...],
                                         server), batch)[0]
                    for u in us]
 
-            # client ZOO (Eq. 2/3)
+            # client ZOO (Eq. 2/3). The raw-loss feed is sanctioned here:
+            # this branch is the noise-free numerical reference and the
+            # engine rejects DP transports on it (ValueError above).
+            # analysis: ignore[PB105] test-only oracle; DP transports are rejected on this path
             gs = [zoo.two_point_grad(u, lp, loss_clean, vfl.mu, phi)
                   for u, lp, phi in zip(us, lps, phis)]
             g_client = jax.tree.map(lambda *x: sum(x) / float(len(x)), *gs)

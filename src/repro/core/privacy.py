@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import tags
 from repro.core.methods import (FOO_WIRE_METHODS, ZOO_WIRE_METHODS,
                                 canonical_method)
 
@@ -96,6 +97,7 @@ def round_messages(method: str, batch: int, embed: int,
 class Ledger:
     messages: List[Message] = dataclasses.field(default_factory=list)
 
+    @tags.accounting
     def log_round(self, method: str, batch: int, embed: int, *,
                   zoo_queries: int = 1, n_clients: int = 1,
                   n_rounds: int = 1):
@@ -227,6 +229,7 @@ class GaussianLossChannel:
         return (self.clip * math.sqrt(2.0 * math.log(1.25 / self.delta))
                 / self.epsilon)
 
+    @tags.party("server")
     def apply(self, losses, key):
         """Clip + noise a (vector of) scalar loss(es) crossing the wire."""
         clipped = jnp.clip(losses, 0.0, self.clip)

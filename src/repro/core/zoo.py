@@ -21,7 +21,7 @@ Beyond-paper extensions:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

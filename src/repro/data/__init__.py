@@ -1,9 +1,9 @@
+from repro.data.pipeline import BatchIterator
 from repro.data.synthetic import (
     lm_token_batches,
     make_classification,
     vertical_partition,
 )
-from repro.data.pipeline import BatchIterator
 
 __all__ = ["lm_token_batches", "make_classification", "vertical_partition",
            "BatchIterator"]

@@ -1,7 +1,7 @@
 """Sharding-aware batch feeding."""
 from __future__ import annotations
 
-from typing import Callable, Iterator, Optional
+from typing import Iterator, Optional
 
 import jax
 import numpy as np

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Iterable, List
+from typing import Any, Iterable
 
 import jax
 import numpy as np
@@ -67,7 +67,7 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
     return -(-n_tokens // page_size)
 
 
-def _is_spec(x) -> bool:
+def _is_spec(x: object) -> bool:
     return isinstance(x, ParamSpec)
 
 
@@ -83,7 +83,7 @@ class LeafPlan:
     seq_axis: int = -1
 
 
-def leaf_plans(dense_specs):
+def leaf_plans(dense_specs: Any) -> Any:
     """LeafPlan tree matching ``cache_specs(1, seq_len)`` leaf-for-leaf."""
 
     def one(s: ParamSpec) -> LeafPlan:
@@ -105,7 +105,8 @@ def leaf_plans(dense_specs):
     return jax.tree.map(one, dense_specs, is_leaf=_is_spec)
 
 
-def paged_specs(dense_specs, *, n_slots: int, n_pages: int, page_size: int):
+def paged_specs(dense_specs: Any, *, n_slots: int, n_pages: int,
+                page_size: int) -> Any:
     """Transform ``cache_specs(1, seq_len)`` into the paged layout."""
     plans = leaf_plans(dense_specs)
 
@@ -140,7 +141,7 @@ class PageAllocator:
     cache memory scales with the lengths actually in flight rather than
     ``max_batch × seq_len``."""
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int) -> None:
         if n_pages <= N_RESERVED:
             raise ValueError(
                 f"need more than {N_RESERVED} pages (zero + trash are "

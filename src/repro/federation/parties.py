@@ -20,14 +20,15 @@ even address one.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Any, Iterator, Tuple, Union
 
 import jax
 
+from repro.analysis import tags
 from repro.core.partition import merge_params, split_params
 
 
-def is_engine_layout(params) -> bool:
+def is_engine_layout(params: Any) -> bool:
     """True for the async engine's {"clients", "server"} param layout."""
     return isinstance(params, dict) and set(params) == {"clients", "server"}
 
@@ -38,7 +39,8 @@ class ServerParty:
     client_keys: Tuple[str, ...]
     name: str = "server"
 
-    def owned(self, params):
+    @tags.party("server")
+    def owned(self, params: Any) -> Any:
         """The server's slice of ``params`` (either layout)."""
         if is_engine_layout(params):
             return params["server"]
@@ -57,7 +59,8 @@ class ClientParty:
     def name(self) -> str:
         return f"client_{self.index:02d}"
 
-    def owned(self, params):
+    @tags.party("client")
+    def owned(self, params: Any) -> Any:
         if is_engine_layout(params):
             return jax.tree.map(lambda a: a[self.index], params["clients"])
         client, _ = split_params(params, self.client_keys)
@@ -71,20 +74,20 @@ class Parties:
     server: ServerParty
     clients: Tuple[ClientParty, ...]
 
-    def __iter__(self):
+    def __iter__(self) -> Iterator[Union[ServerParty, ClientParty]]:
         yield self.server
         yield from self.clients
 
-    def __len__(self):
+    def __len__(self) -> int:
         return 1 + len(self.clients)
 
-    def assemble(self, server_tree, client_trees):
+    def assemble(self, server_tree: Any, client_trees: Any) -> Any:
         """Inverse of the per-party split: stack the client slices back
         into the engine layout (the canonical party-scoped layout)."""
         import jax.numpy as jnp
         clients = jax.tree.map(lambda *rows: jnp.stack(rows), *client_trees)
         return {"clients": clients, "server": server_tree}
 
-    def merge_global(self, server_tree, client_tree):
+    def merge_global(self, server_tree: Any, client_tree: Any) -> Any:
         """Rebuild a GLOBAL-layout tree from its two party partitions."""
         return merge_params(client_tree, server_tree)

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import tags
 from repro.core.adapters import ModelAdapter
 from repro.core.privacy import Ledger
 from repro.federation import paging, serving
@@ -125,6 +126,14 @@ def make_paged_decode_block(adapter: ModelAdapter, n_clients: int,
               gen_pos_st, rem_st, gen_buf_st):
         sl = jnp.arange(n_slots)
 
+        @tags.wire("up", accounted_by="Transport.account_serve",
+                   kind="embedding",
+                   reason="continuous-batching decode step: each active "
+                          "slot's client embeds its sampled token and the "
+                          "embedding crosses to server_decode_paged; the "
+                          "traffic is metered deferred — prompt uploads at "
+                          "admission, generation at retirement (see module "
+                          "docstring)")
         def body(carry, _):
             logits, caches, t, gen_pos, rem, gen_buf = carry
             active = (rem > 0).astype(jnp.int32)
@@ -251,6 +260,7 @@ class ServeScheduler:
         self._admitted_at = np.zeros(max_batch, np.int64)
         self._tables = np.full((max_batch, self.pages_per_seq),
                                paging.ZERO_PAGE, np.int32)
+        self._tables_dev = None     # device mirror, rebuilt on mutation
         self._results: Dict[int, RequestResult] = {}
 
         # device-side slot state. Sequence cache leaves live in the shared
@@ -407,6 +417,7 @@ class ServeScheduler:
         for slot, req, page_ids in zip(slots, reqs, pages):
             self._tables[slot, :] = paging.ZERO_PAGE
             self._tables[slot, :len(page_ids)] = page_ids
+            self._tables_dev = None
             self._slot_pages[slot] = page_ids
             self._slot_req[slot] = req
             self._remaining[slot] = req.gen_len
@@ -448,6 +459,15 @@ class ServeScheduler:
         m = int(min(self._remaining[s] for s in occ))
         return 1 << (max(m, 1).bit_length() - 1)    # pow2 floor <= min rem
 
+    def _device_tables(self):
+        """Device mirror of the block tables, uploaded once per mutation
+        (admission / retirement) instead of once per block — the first
+        scheduler revision re-uploaded an identical table every block."""
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self._tables)
+        return self._tables_dev
+
+    @tags.hot_loop
     def _block_step(self):
         """Run one compiled K-step decode block over all slots — one
         dispatch, zero host syncs."""
@@ -456,7 +476,7 @@ class ServeScheduler:
             return
         k = self._block_len()
         prog = self._block_progs.get(k)
-        tables = jnp.asarray(self._tables)
+        tables = self._device_tables()
         args = (self.params, tables, self._keydata_st, self._logits_st,
                 self._caches_st, self._t_st, self._gen_pos_st,
                 self._rem_st, self._gen_buf_st)
@@ -476,6 +496,10 @@ class ServeScheduler:
             if req is not None:
                 self._remaining[slot] -= k
 
+    @tags.host_boundary("once-per-wave retirement fetch: one batched "
+                        "device->host transfer covers every slot that "
+                        "finished in the last block — O(requests) syncs, "
+                        "not O(steps)")
     def _retire_wave(self):
         """Retire every slot that finished in the last block: ONE
         batched device→host fetch for all of them, generation wire
@@ -502,6 +526,7 @@ class ServeScheduler:
             self.allocator.free_(self._slot_pages[slot])
             self._slot_pages[slot] = None
             self._tables[slot, :] = paging.ZERO_PAGE
+            self._tables_dev = None
             self._slot_req[slot] = None
 
     # ----------------------------------------------------------- drive ----

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import tags
 from repro.core.adapters import ModelAdapter
 from repro.core.privacy import Ledger
 
@@ -198,6 +199,9 @@ def make_serve_step(adapter: ModelAdapter, n_clients: int, seq_len: int):
     _require_serve_plane(adapter)
     span = seq_len // n_clients
 
+    @tags.wire("up", accounted_by="Transport.account_serve", kind="embedding",
+               reason="split-inference uplink: the owning client's one-token "
+                      "embedding; logits and caches stay server-side")
     def step(params, tok, caches, t):
         m = t // span
         client_m = jax.tree.map(lambda a: a[m], params["clients"])
@@ -222,6 +226,9 @@ def make_prefill_chunk(adapter: ModelAdapter, n_clients: int, seq_len: int):
             f"adapter {adapter.name!r} has no server_prefill hook; use the "
             "per-token step loop")
 
+    @tags.wire("up", accounted_by="Transport.account_serve", kind="embedding",
+               reason="chunked-prefill uplink: one whole span embedding per "
+                      "chunk; prefill carries no downlink")
     def chunk(params, toks, caches, t0, m):
         client_m = jax.tree.map(lambda a: a[m], params["clients"])
         e = adapter.client_embed(client_m, toks)
@@ -248,6 +255,10 @@ def make_decode_scan(adapter: ModelAdapter, n_clients: int, seq_len: int,
     span = seq_len // n_clients
 
     def run(params, logits0, caches, key):
+        @tags.wire("up", accounted_by="Transport.account_serve",
+                   kind="embedding",
+                   reason="scan-compiled decode: per-step one-token uplink, "
+                          "token ids come back as scan outputs")
         def body(carry, t):
             logits, caches = carry
             nxt = sample_token(logits, key, t, temperature, vocab_size)

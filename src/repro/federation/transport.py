@@ -21,6 +21,7 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.analysis import tags
 from repro.core.methods import (SYNC_METHODS, ZOO_WIRE_METHODS,
                                 canonical_method)
 from repro.core.privacy import (GaussianLossChannel, Ledger, serve_messages)
@@ -36,7 +37,7 @@ class Transport:
     method: str = "cascaded"
     noise: Optional[GaussianLossChannel] = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         object.__setattr__(self, "method", canonical_method(self.method))
         if self.noise is not None:
             if self.method not in ZOO_WIRE_METHODS:
@@ -60,7 +61,10 @@ class Transport:
         return self.method in ZOO_WIRE_METHODS
 
     # ---------------------------------------------------------- downlink --
-    def downlink(self, losses, key):
+    @tags.wire("down", accounted_by="Transport.account", kind="loss",
+               reason="the one legal downlink: scalar losses, DP-noised "
+                      "when a channel is configured")
+    def downlink(self, losses: jax.Array, key: jax.Array) -> jax.Array:
         """The scalar-loss downlink hook (server -> client).
 
         Identity when no noise channel is configured (same jaxpr as a bare
@@ -72,6 +76,7 @@ class Transport:
         return self.noise.apply(losses, jax.random.fold_in(key, NOISE_SALT))
 
     # --------------------------------------------------------- accounting --
+    @tags.accounting
     def account(self, *, batch: int, embed: int, zoo_queries: int = 1,
                 n_clients: int = 1, n_rounds: int = 1,
                 ledger: Optional[Ledger] = None) -> Ledger:
@@ -85,6 +90,7 @@ class Transport:
                          n_clients=n_clients, n_rounds=n_rounds)
         return ledger
 
+    @tags.accounting
     def account_serve(self, *, batch: int, embed: int, n_steps: int = 1,
                       n_gen: Optional[int] = None,
                       ledger: Optional[Ledger] = None) -> Ledger:
@@ -105,6 +111,7 @@ class Transport:
         ledger.messages.extend(serve_messages(batch, embed) * n_gen)
         return ledger
 
+    @tags.accounting
     def account_serve_step(self, *, batch: int, embed: int,
                            gen: bool = True,
                            ledger: Optional[Ledger] = None) -> Ledger:

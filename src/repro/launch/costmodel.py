@@ -23,14 +23,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig, VFLConfig
 from repro.core.cascade import make_cascaded_step
 from repro.models import common
-from repro.models.model_api import (LONG_WINDOW, build_cache_specs,
+from repro.models.model_api import (build_cache_specs,
                                     build_input_specs, build_model)
 from repro.optim import sgd
 from repro.sharding.rules import ACT_RULES, PARAM_RULES

@@ -24,7 +24,7 @@ import traceback    # noqa: E402
 import jax          # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.configs import (INPUT_SHAPES, TrainConfig, VFLConfig, get_config,  # noqa: E402
+from repro.configs import (INPUT_SHAPES, VFLConfig, get_config,  # noqa: E402
                            get_shape, list_archs)
 from repro.core.async_engine import EngineConfig  # noqa: E402
 from repro.core.methods import METHOD_ALIASES, canonical_method  # noqa: E402
@@ -33,13 +33,12 @@ from repro.launch import costmodel  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
 from repro.models import common  # noqa: E402
-from repro.models.model_api import (LONG_WINDOW, abstract_inputs,  # noqa: E402
+from repro.models.model_api import (LONG_WINDOW,  # noqa: E402
                                     build_cache_specs, build_input_specs,
                                     build_model)
 from repro.optim import sgd  # noqa: E402
 from repro.sharding.rules import (ACT_RULES, PARAM_RULES,  # noqa: E402
                                   PARAM_RULES_NO_FSDP)
-from repro.sharding import rules as shrules  # noqa: E402
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")

@@ -127,10 +127,15 @@ def _serve_continuous(arch: str, cfg, *, batch: int, prompt_len: int,
                                       prompt_len=prompt_len,
                                       gen_len=gen_len, seed=seed)
     srv = fed.serve(params, max_batch=max_batch, temperature=temperature)
+    # draw every request's prompt in one batched device op and fetch the
+    # whole (batch, prompt_len) block with a single transfer — same
+    # per-request fold_in streams as drawing them one by one
+    prompts = np.asarray(jax.vmap(
+        lambda i: jax.random.randint(jax.random.fold_in(key, 1000 + i),
+                                     (prompt_len,), 0, cfg.vocab_size))(
+                                         jnp.arange(batch)))
     for i in range(batch):
-        toks = jax.random.randint(jax.random.fold_in(key, 1000 + i),
-                                  (prompt_len,), 0, cfg.vocab_size)
-        srv.submit(np.asarray(toks), gen_len, key=jax.random.fold_in(key, i))
+        srv.submit(prompts[i], gen_len, key=jax.random.fold_in(key, i))
     results = srv.run()
     assert len(results) == batch
     total_tokens = sum(r.tokens.size for r in results)
@@ -189,12 +194,15 @@ def _serve_global(arch: str, cfg, *, batch: int, prompt_len: int,
         else:
             nxt = jnp.argmax(lg, axis=-1)
         nxt = jnp.minimum(nxt, cfg.vocab_size - 1).astype(jnp.int32)
-        out_tokens.append(np.asarray(nxt))
+        # tokens stay on device; the host sees ONE (B, gen_len) fetch
+        # after the loop instead of gen_len per-token syncs
+        out_tokens.append(nxt)
         logits, caches = decode(params, {"tokens": nxt[:, None], **extra},
                                 caches, t)
+    jax.block_until_ready(logits)
     t_decode = time.time() - t0
 
-    gen = np.stack(out_tokens, axis=1)
+    gen = np.asarray(jnp.stack(out_tokens, axis=1))
     assert gen.shape == (batch, gen_len)
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     return {

@@ -131,7 +131,10 @@ def freeze_state(active, new, old):
     batched decode step (their inputs are zeroed, but decay would still
     drift the state — freezing keeps retired slots inert and finite)."""
     a = active.reshape(active.shape + (1,) * (new.ndim - 1))
-    return jnp.where(a > 0, new, old)
+    # anchor to the carried state's dtype: if ``new`` came out of an f32
+    # accumulation while the carry is bf16, a bare where() would promote
+    # the carry and destabilize the scan signature (TH203)
+    return jnp.where(a > 0, new.astype(old.dtype), old)
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import attention as attn_mod
 from repro.models import encdec, rwkv as rwkv_mod, ssm as ssm_mod, transformer
-from repro.models.common import ParamSpec, abstract, stack_layer_specs
+from repro.models.common import ParamSpec, abstract
 
 # window used by the sliding-window (long_500k) variants
 LONG_WINDOW = 4096

@@ -10,7 +10,6 @@ scan as per-layer xs/ys.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -9,7 +9,7 @@ friendly; params may be bf16 with fp32 optimizer state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

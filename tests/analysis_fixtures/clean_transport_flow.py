@@ -1,0 +1,18 @@
+"""The bitwise-benign flow the analyzer must NOT flag: a declared,
+metered uplink and a downlink-laundered loss feed to the ZOO estimator
+(the shape of ``repro.core.cascade.make_cascaded_step``)."""
+import jax
+
+from repro.analysis import tags
+from repro.core import zoo
+
+
+@tags.wire("up", accounted_by="Transport.account", kind="embedding",
+           reason="declared uplink: clean + perturbed embeddings, metered "
+                  "by the fixture Transport")
+def cascaded_step(adapter, transport, params, batch, u_stack, mu, phi, key):
+    lanes = adapter.client_lanes(params["clients"], batch, u_stack, mu)
+    losses = adapter.server_loss(params["server"], lanes, batch)  # declared
+    recv = transport.downlink(losses, key)  # DP noise + ledger
+    g = zoo.grad_from_losses(u_stack, recv[1:], recv[0], mu, phi)  # laundered
+    return g, jax.tree.map(lambda a: a, params)

@@ -1,0 +1,12 @@
+"""TH201 via the hot-module path match (this file's path ends with
+``federation/scheduler.py``): host syncs INSIDE for/while loops are
+flagged without any decorator; the same sync outside a loop is not."""
+import numpy as np
+
+
+def drive(srv):
+    out = []
+    for rid in srv.queue:
+        out.append(np.asarray(srv.fetch(rid)))  # TH201: sync per iteration
+    final = np.asarray(srv.buffer)  # quiet: one amortized fetch after
+    return out, final

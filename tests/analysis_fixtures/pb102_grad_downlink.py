@@ -1,0 +1,21 @@
+"""PB102 both ways: a gradient pushed into a client hook, and a gradient
+returned from client-party code — neither declares a "down" wire."""
+import jax
+
+from repro.analysis import tags
+
+
+def push_exact_grads(adapter, params, batch):
+    g = jax.grad(_loss)(params)
+    adapter.client_forward(g, batch)  # PB102: gradient into a client hook
+    return g
+
+
+@tags.party("client")
+def client_receives(params, batch):
+    g = jax.value_and_grad(_loss)(params)
+    return g  # PB102: gradient-typed return from client-party code
+
+
+def _loss(params):
+    return 0.0

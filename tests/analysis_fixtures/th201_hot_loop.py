@@ -1,0 +1,21 @@
+"""TH201 in a ``@tags.hot_loop`` body: syncs, coercions and uploads are
+flagged ANYWHERE, no loop statement required. The ``host_boundary`` twin
+doing the same fetch is sanctioned."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import tags
+
+
+@tags.hot_loop
+def block_step_bad(state):
+    tables = jnp.asarray(state.tables)  # TH201: per-step upload
+    k = float(state.remaining.min())    # TH201: host coercion
+    toks = np.asarray(state.gen_buf)    # TH201: device->host fetch
+    return tables, k, toks
+
+
+@tags.host_boundary("once-per-wave retirement fetch, amortized over the "
+                    "whole drain")
+def retire_wave_ok(state):
+    return np.asarray(state.gen_buf)  # quiet: sanctioned crossing

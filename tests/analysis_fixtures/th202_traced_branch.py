@@ -1,0 +1,32 @@
+"""TH202: Python branching on traced values inside traced functions.
+Shape/None checks and static_argnames-excluded parameters stay legal."""
+import jax
+
+
+@jax.jit
+def relu_bad(x):
+    if x > 0:  # TH202: traced-value branch
+        return x
+    return x * 0
+
+
+@jax.jit
+def pad_ok(x):
+    if x.ndim == 1:  # quiet: shape metadata is static
+        return x[None]
+    return x
+
+
+def step(x, mode):
+    if mode == "fast":  # quiet: `mode` is a static argument below
+        return x * 2
+    return x
+
+
+def none_guard(x, mask):
+    out = x if mask is None else x * mask  # quiet: None check is static
+    return out
+
+
+step_fast = jax.jit(step, static_argnames=("mode",))
+guard_traced = jax.jit(none_guard)

@@ -1,0 +1,26 @@
+"""TH203: literal-dtype casts that (re)define a ``lax.scan`` carry.
+Casting the xs/outputs and anchoring to ``.dtype`` are both fine."""
+import jax
+import jax.numpy as jnp
+
+
+def body_rebind(h, x):
+    h = (h + x).astype(jnp.float32)  # TH203: carry rebound at literal dtype
+    return h, x
+
+
+def body_return(h, x):
+    return (h * x).astype(jnp.bfloat16), h  # TH203: carry slot of the return
+
+
+def body_ok(h, x):
+    acc = x.astype(jnp.float32)      # quiet: xs cast (f32 accumulation)
+    h = (h + acc).astype(h.dtype)    # quiet: anchored to the carry dtype
+    return h, acc
+
+
+def run(h0, xs):
+    a, _ = jax.lax.scan(body_rebind, h0, xs)
+    b, _ = jax.lax.scan(body_return, h0, xs)
+    c, _ = jax.lax.scan(body_ok, h0, xs)
+    return a, b, c

@@ -1,0 +1,18 @@
+"""TH204: leftover debug instrumentation."""
+import jax
+
+
+def scan_body_with_debug(h, x):
+    jax.debug.print("h={h}", h=h)  # TH204
+    return h + x, x
+
+
+@jax.jit
+def traced_print(x):
+    print("tracing", x)  # TH204: fires once per trace, not per step
+    return x * 2
+
+
+def stale_breakpoint(x):
+    breakpoint()  # TH204
+    return x

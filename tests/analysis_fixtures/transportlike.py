@@ -1,0 +1,10 @@
+"""The corpus' accounting target: `Transport.account` is the one legal
+``accounted_by`` qualname inside this fixture set (mirrors the real
+``repro.federation.transport.Transport``)."""
+from repro.analysis import tags
+
+
+class Transport:
+    @tags.accounting
+    def account(self, message):
+        return message

@@ -1,0 +1,204 @@
+"""The analysis plane, tested in both directions.
+
+Static passes: every rule in the catalogue trips on its seeded fixture
+(tests/analysis_fixtures/), every clean exemplar stays quiet, the
+suppression/baseline machinery behaves, and the shipped tree itself is
+clean under ``--strict`` (the CI gate invariant).
+
+Runtime sanitizers: the host-transfer and recompile sentinels count what
+a run actually does, and the continuous-batching scheduler's steady
+state — block-stepping between admission and retirement on a warmed
+engine — performs ZERO device->host transfers and ZERO retraces.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import cli, runtime, tags
+from repro.models import common
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "analysis_fixtures")
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return cli.analyze_paths([FIXTURES])
+
+
+def _rules_by_file(findings):
+    out = {}
+    for f in findings:
+        name = os.path.relpath(f.path, FIXTURES)
+        out.setdefault(name, []).append(f.rule)
+    return {k: sorted(v) for k, v in out.items()}
+
+
+# ------------------------------------------------------- static passes ----
+
+EXPECTED = {
+    "federation/scheduler.py": ["TH201"],
+    "pb101_undeclared_uplink.py": ["PB101"],
+    "pb102_grad_downlink.py": ["PB102", "PB102"],
+    "pb103_raw_features.py": ["PB103"],
+    "pb104_unmetered_wire.py": ["PB104"],
+    "pb105_raw_losses.py": ["PB105"],
+    "suppressed.py": ["BA001", "PB101"],
+    "th201_hot_loop.py": ["TH201", "TH201", "TH201"],
+    "th202_traced_branch.py": ["TH202"],
+    "th203_scan_carry.py": ["TH203", "TH203"],
+    "th204_debug.py": ["TH204", "TH204", "TH204"],
+}
+
+
+def test_every_rule_has_a_failing_fixture(corpus):
+    tripped = {f.rule for f in corpus}
+    static_rules = set(cli.RULES) - {"BA002"}  # BA002 needs a broken file
+    assert static_rules <= tripped, static_rules - tripped
+
+
+def test_fixture_corpus_exact(corpus):
+    assert _rules_by_file(corpus) == EXPECTED
+
+
+def test_clean_exemplars_stay_quiet(corpus):
+    flagged = {os.path.basename(f.path) for f in corpus}
+    assert "clean_transport_flow.py" not in flagged
+    assert "transportlike.py" not in flagged
+
+
+def test_suppression_mechanics(corpus):
+    sup = [f for f in corpus if f.path.endswith("suppressed.py")]
+    # the justified ignore swallows its PB101; the reasonless one is
+    # BA001 and its PB101 survives
+    assert {(f.rule, f.line) for f in sup} == {("BA001", 13), ("PB101", 14)}
+
+
+def test_ba002_on_unparseable_file(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    findings = cli.analyze_paths([str(bad)])
+    assert [f.rule for f in findings] == ["BA002"]
+
+
+def test_shipped_tree_is_clean():
+    assert cli.analyze_paths([SRC]) == []
+
+
+def test_baseline_workflow(tmp_path, capsys):
+    base = str(tmp_path / "baseline.json")
+    assert cli.main([FIXTURES, "--write-baseline", base]) == 0
+    keys = json.loads(open(base).read())
+    assert len(keys) == sum(len(v) for v in EXPECTED.values())
+    # baselined findings are tolerated...
+    assert cli.main([FIXTURES, "--baseline", base]) == 0
+    # ...but --strict ignores the baseline entirely
+    assert cli.main([FIXTURES, "--baseline", base, "--strict"]) == 1
+    capsys.readouterr()
+
+
+def test_wire_decorator_stacks_and_host_boundary_needs_reason():
+    @tags.wire("up", accounted_by="Transport.account")
+    @tags.wire("down", accounted_by="Transport.account", kind="loss")
+    def both_ways():
+        return None
+
+    assert [w["direction"] for w in both_ways.__vfl_wire__] == ["down", "up"]
+    with pytest.raises(ValueError):
+        tags.host_boundary("")
+    with pytest.raises(ValueError):
+        tags.wire("sideways", accounted_by="Transport.account")
+    with pytest.raises(ValueError):
+        tags.party("referee")
+
+
+# --------------------------------------------------- runtime sentinels ----
+
+
+def test_host_sentinel_counts_each_materializing_read_once():
+    rep = runtime.SanitizerReport()
+    with runtime.host_transfer_sentinel(rep):
+        x = jnp.arange(4) * 2
+        np.asarray(x)                       # 1: buffer-protocol read
+        y = jnp.arange(4) + 1
+        y.tolist()                          # 2: materializes + caches
+        y.tolist()                          # cached: free
+        np.asarray(y)                       # cached: free
+        (jnp.ones(()) * 3).item()           # 3
+        int(jnp.arange(5).sum())            # 4
+        np.asarray(np.arange(4))            # host array: free
+    assert rep.d2h == 4, rep.d2h_sites
+
+
+def test_strict_raises_and_names_the_call_site():
+    with pytest.raises(runtime.StrictModeViolation) as exc:
+        with runtime.strict():
+            np.asarray(jnp.arange(3) + 7)
+    assert "test_analysis.py" in str(exc.value)
+
+
+def test_recompile_sentinel_fresh_vs_cached():
+    @jax.jit
+    def f(x):
+        return x * 2 + 1
+
+    arg = jnp.arange(6, dtype=jnp.float32)
+    fresh, cached = runtime.SanitizerReport(), runtime.SanitizerReport()
+    with runtime.recompile_sentinel(fresh):
+        f(arg).block_until_ready()
+    with runtime.recompile_sentinel(cached):
+        f(arg).block_until_ready()
+    assert fresh.compiles >= 1
+    assert cached.compiles == 0
+
+
+# ------------------------------------- steady-state scheduler hygiene ----
+
+
+def _toy_session(n_clients=2, seq_len=24):
+    from repro.configs import get_config, reduced
+    from repro.federation import Federation
+    cfg = reduced(get_config("phi3-mini-3.8b"), d_model=64, n_heads=2,
+                  n_kv_heads=1, d_ff=128, vocab_size=256, remat=False)
+    fed = Federation.build(cfg, n_clients=n_clients, seq_len=seq_len)
+    return cfg, fed
+
+
+def test_steady_state_paged_decode_is_host_silent():
+    """The acceptance invariant: on a warmed engine, the block-stepping
+    loop between admission and retirement does zero d2h transfers and
+    zero fresh compiles — strict() raises otherwise."""
+    PL, GL, n_req = 8, 16, 3
+    cfg, fed = _toy_session(seq_len=PL + GL)
+    key = jax.random.key(0)
+    params = common.materialize(fed.model.param_specs, key)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 1), (n_req, PL), 0, cfg.vocab_size))
+
+    srv = fed.serve(params, max_batch=n_req)
+    for i in range(n_req):
+        srv.submit(prompts[i], GL, key=jax.random.fold_in(key, i))
+    warm = srv.run()                     # compiles the whole block ladder
+
+    for i in range(n_req):
+        srv.submit(prompts[i], GL, key=jax.random.fold_in(key, i))
+    srv._admit_free_slots()
+
+    def occupied():
+        return [s for s in range(srv.max_batch)
+                if srv._slot_req[s] is not None]
+
+    with runtime.strict() as rep:        # raises StrictModeViolation on any
+        while occupied() and min(srv._remaining[s]
+                                 for s in occupied()) > 0:
+            srv._block_step()
+    assert rep.d2h == 0 and rep.compiles == 0
+
+    srv._retire_wave()                   # the one sanctioned wave fetch
+    res = [srv.results[r.rid + n_req] for r in warm]
+    assert all(np.array_equal(a.tokens, b.tokens)
+               for a, b in zip(res, warm))

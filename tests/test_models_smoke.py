@@ -1,8 +1,6 @@
 """Per-architecture smoke tests (deliverable f): a REDUCED variant of each
 assigned architecture runs one forward + one cascaded train step on CPU,
 asserting output shapes and no NaNs. Decode consistency per family."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

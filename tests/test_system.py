@@ -4,7 +4,6 @@ Exercises the public API the way a user would: build a model from the
 registry, train it with the cascaded VFL driver, serve it, and check the
 paper's qualitative claims (cascaded ≈ FOO ≫ full-ZOO; no gradients on
 the wire)."""
-import jax
 import numpy as np
 import pytest
 

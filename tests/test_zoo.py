@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import zoo
-from repro.core.partition import tree_dim
 
 
 def quad_loss(w):
