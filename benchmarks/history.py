@@ -1,0 +1,67 @@
+"""Bench-trajectory persistence for ``BENCH_*.json`` artifacts.
+
+Benchmarks used to overwrite their JSON file on every run, so the perf
+trajectory across commits read as empty. Every emitter now goes through
+:func:`append_history`, which keeps the file as::
+
+    {"history": [{"commit": <short sha>, "timestamp": <iso utc>,
+                  "results": {...}}, ...]}
+
+appending one dated entry per run. A legacy flat-dict file is migrated
+in place: its contents become the first history entry (commit
+``"pre-history"``) before the new entry is appended, so no measurement
+is lost. :func:`latest` is the read side — CI assertions check
+``latest(path)`` instead of reaching into the file layout.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+
+
+def _commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except OSError:  # pragma: no cover - git not installed
+        return "unknown"
+
+
+def load_history(path: str) -> dict:
+    """The full ``{"history": [...]}`` document (migrating a legacy flat
+    dict to a single ``pre-history`` entry); empty history if no file."""
+    if not os.path.exists(path):
+        return {"history": []}
+    with open(path) as f:
+        doc = json.load(f)
+    if "history" not in doc:
+        doc = {"history": [{"commit": "pre-history", "timestamp": None,
+                            "results": doc}]}
+    return doc
+
+
+def append_history(path: str, results: dict) -> dict:
+    """Append a dated ``results`` entry to ``path`` and return the doc."""
+    doc = load_history(path)
+    doc["history"].append({
+        "commit": _commit(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "results": results,
+    })
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return doc
+
+
+def latest(path: str) -> dict:
+    """The most recent run's results."""
+    history = load_history(path)["history"]
+    if not history:
+        raise FileNotFoundError(f"no bench history at {path!r}")
+    return history[-1]["results"]

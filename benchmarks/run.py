@@ -17,7 +17,13 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
   bench_serve_throughput    — fused split-serve engine: seed per-token
                               loop vs scan decode vs batched vs continuous
                               batching (emits BENCH_serve.json)
+  bench_wire_faults         — population engine over the wire plane:
+                              throughput + bytes/round vs drop/latency
+                              (emits BENCH_wire.json)
   bench_roofline            — §Roofline terms from the dry-run artifacts
+
+``BENCH_*.json`` artifacts keep a dated history entry per run (see
+``benchmarks.history``) instead of being overwritten.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
 """
@@ -241,6 +247,13 @@ def bench_serve_throughput(fast: bool):
     bench(fast, row=row)
 
 
+# ================================================ wire fault sweep =========
+
+def bench_wire_faults(fast: bool):
+    from benchmarks.wire_faults import bench_wire_faults as bench
+    bench(fast, row=row)
+
+
 # ======================================================== roofline =========
 
 def bench_roofline(fast: bool):
@@ -276,6 +289,7 @@ BENCHES = {
     "async_scale": bench_async_scale,
     "lm_async": bench_lm_async,
     "serve_throughput": bench_serve_throughput,
+    "wire_faults": bench_wire_faults,
     "roofline": bench_roofline,
 }
 

@@ -26,7 +26,8 @@ the speed must not cost: split decode stays bitwise-equal to global
 decode, and per-request wire totals are identical across all paths.
 
 Emits ``BENCH_serve.json`` (tokens/s per mode, uplink bytes per token,
-speedups, invariant checks) — the serve-perf trajectory record.
+speedups, invariant checks) — the serve-perf trajectory record, one
+dated ``history`` entry per run (``benchmarks.history``).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--full] [--out P]
 """
@@ -298,8 +299,8 @@ def bench_serve_throughput(fast: bool = True, row=None, out=DEFAULT_OUT):
         "wire_per_request_unchanged": wire_unchanged,
         "continuous_ledgers_byte_identical": ledgers_exact,
     }
-    with open(out, "w") as f:
-        json.dump(results, f, indent=2)
+    from benchmarks.history import append_history
+    append_history(out, results)
     if row is not None:
         row("serve_speedup", 0.0,
             f"batched_vs_seed={results['speedup_batched_vs_seed']:.1f}x;"

@@ -1,0 +1,147 @@
+"""Wire-plane fault sweep: population-engine throughput and wire cost
+vs. injected drop rate and latency.
+
+Runs the paper's tabular protocol (§VI-A-b MLP, 4 clients) through
+``run_population`` over a grid of ``FaultPlan``s — drop ∈ {0, 0.1, 0.2}
+× latency ∈ {0, 5}ms — and records, per point:
+
+  * rounds/s (host wall clock) and virtual ms/round (the fault plan's
+    deterministic latency accounting),
+  * measured serialized bytes per round (the ledger's wire measurement)
+    plus the legacy formula cross-check,
+  * participation (admitted / activated), drop/straggler counters, and
+    whether every scheduled round completed with finite losses.
+
+Two standing invariants land in the emitted JSON for CI to assert:
+
+  * ``no_deadlock_at_20pct_dropout`` — every 20%-drop point executed all
+    of its rounds with finite losses (graceful degradation: a dropped
+    client misses the round, the server still steps — nothing hangs);
+  * ``zero_fault_matches_legacy`` — the drop=0/latency=0 point is
+    bitwise-identical to the legacy direct-call engine.
+
+Emits ``BENCH_wire.json`` with one dated ``history`` entry per run
+(``benchmarks.history``).
+
+Run: PYTHONPATH=src python -m benchmarks.wire_faults [--full] [--out P]
+(also registered as ``benchmarks.run --only wire_faults``.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.history import append_history
+from repro.configs import VFLConfig
+from repro.configs.paper_mlp import PaperMLPConfig
+from repro.core import async_engine
+from repro.core.adapters import tabular_adapter
+from repro.core.async_engine import EngineConfig
+from repro.data import make_classification, vertical_partition
+from repro.federation import Transport
+from repro.wire import FaultPlan
+
+DEFAULT_OUT = "BENCH_wire.json"
+DROPS = (0.0, 0.1, 0.2)
+LATENCIES_MS = (0.0, 5.0)
+
+
+def bench_wire_faults(fast: bool = True, row=None, out=DEFAULT_OUT):
+    """Sweep the fault grid; returns (and appends to ``out``) the record."""
+    cfg = PaperMLPConfig(n_features=32, n_classes=4, n_clients=4,
+                         client_embed=16, server_embed=32)
+    steps = 40 if fast else 200
+    X, y = make_classification(0, 256, cfg.n_features, cfg.n_classes)
+    Xp = jnp.asarray(vertical_partition(X, cfg.n_clients))
+    y = jnp.asarray(y)
+    from repro.models import common, tabular
+    params = common.materialize(tabular.param_specs(cfg), jax.random.key(0))
+    vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=0.05)
+    ec = EngineConfig(method="cascaded", steps=steps, batch_size=8)
+    adapter, wire = tabular_adapter(cfg), Transport("cascaded")
+
+    legacy = async_engine.run(ec, vfl, params, Xp, y)
+    sweep = []
+    for drop in DROPS:
+        for lat in LATENCIES_MS:
+            # max_retries=1 keeps real losses in the trace at these drop
+            # rates (the default budget of 3 retries absorbs nearly all)
+            plan = FaultPlan(seed=0, drop=drop, latency_ms=lat,
+                             jitter_ms=lat / 4, max_retries=1)
+            t0 = time.perf_counter()
+            res = async_engine.run_population(
+                adapter, wire, vfl, ec, params, Xp, y, fault_plan=plan)
+            wall = time.perf_counter() - t0
+            s = res.stats
+            executed = s["rounds_executed"]
+            point = {
+                "drop": drop, "latency_ms": lat,
+                "rounds": executed,
+                "completed_all_rounds": executed == steps,
+                "finite_losses": bool(np.all(np.isfinite(res.losses))),
+                "rounds_per_s": round(executed / max(wall, 1e-9), 2),
+                "virtual_ms_per_round": round(s["virtual_ms"]
+                                              / max(executed, 1), 3),
+                "serialized_bytes_per_round": (res.serialized_bytes
+                                               // max(executed, 1)),
+                "formula_bytes_per_round": (s["formula_bytes"]
+                                            // max(executed, 1)),
+                "participation": round(s["participation"], 4),
+                "uplink_drops": s["uplink_drops"],
+                "downlink_drops": s["downlink_drops"],
+                "degraded_rounds": s["degraded_rounds"],
+                "retransmit_frames": s["retransmit_frames"],
+                "loss_last": float(np.mean(res.losses[-5:])),
+                "matches_legacy_bitwise": bool(
+                    np.array_equal(legacy.losses, res.losses)),
+            }
+            sweep.append(point)
+            if row is not None:
+                row(f"wire_drop{drop}_lat{lat:g}",
+                    wall / max(executed, 1) * 1e6,
+                    f"participation={point['participation']};"
+                    f"bytes_per_round={point['serialized_bytes_per_round']};"
+                    f"degraded={point['degraded_rounds']}")
+
+    at20 = [p for p in sweep if p["drop"] == 0.2]
+    clean = [p for p in sweep if p["drop"] == 0.0
+             and p["latency_ms"] == 0.0]
+    results = {
+        "config": {"n_clients": cfg.n_clients, "steps": steps,
+                   "batch_size": ec.batch_size, "method": "cascaded",
+                   "max_retries": 1},
+        "sweep": sweep,
+        "no_deadlock_at_20pct_dropout": bool(
+            at20 and all(p["completed_all_rounds"] and p["finite_losses"]
+                         for p in at20)),
+        "zero_fault_matches_legacy": bool(
+            clean and all(p["matches_legacy_bitwise"] for p in clean)),
+    }
+    append_history(out, results)
+    if row is not None:
+        row("wire_faults_invariants", 0.0,
+            f"no_deadlock_at_20pct={results['no_deadlock_at_20pct_dropout']};"
+            f"zero_fault_bitwise={results['zero_fault_matches_legacy']}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", dest="fast", action="store_false",
+                    default=True)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    res = bench_wire_faults(args.fast, row=None, out=args.out)
+    print(json.dumps(res, indent=2))
+    assert res["no_deadlock_at_20pct_dropout"], (
+        "a 20% dropout run failed to complete — the population engine "
+        "must degrade, not hang")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,15 +20,28 @@ _SEP = "::"
 _UINT_FOR_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
 
 
-def _encode(arr: np.ndarray) -> np.ndarray:
+def encode_array(arr: np.ndarray) -> np.ndarray:
+    """Lossless storage view of ``arr``: extension dtypes (bfloat16,
+    float8 — void descrs npz/raw buffers cannot carry) become a same-width
+    uint view; everything else passes through unchanged. The true dtype
+    must travel out of band (manifest / wire header) for
+    :func:`decode_array` to restore it. Shared by the checkpoint plane and
+    the ``repro.wire`` message codec, so a serialized byte is the same
+    byte in both."""
     if arr.dtype.kind == "V":
         return arr.view(_UINT_FOR_SIZE[arr.dtype.itemsize])
     return arr
 
 
-def _decode(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+def decode_array(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    """Inverse of :func:`encode_array` given the recorded true dtype."""
     dt = np.dtype(dtype_str)
     return arr.view(dt) if (dt.kind == "V" and arr.dtype != dt) else arr
+
+
+# internal spellings kept for the save/load paths below
+_encode = encode_array
+_decode = decode_array
 
 
 def _flatten(tree) -> dict:

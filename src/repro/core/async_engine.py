@@ -51,6 +51,21 @@ bitwise identical, larger blocks agree to float-reassociation.
 
 Synchronous baselines (Split-Learning, Syn-ZOO-VFL) activate *all* clients
 every round with fresh embeddings (no table staleness).
+
+Population plane (``run_population``)
+-------------------------------------
+:func:`run_population` runs the SAME protocol over a real wire
+(``repro.wire``): every client party lives behind a
+:class:`~repro.wire.backend.WireBackend` endpoint (in-proc loopback by
+default; a TCP socket puts it in another process), messages are genuinely
+serialized, and the ledger meters actual frame bytes. A
+:class:`~repro.wire.faults.FaultPlan` injects per-party drops/latency in
+deterministic virtual time, and :class:`PopulationConfig` adds
+straggler admission and bounded-staleness forcing on top of the sampled
+activation schedule. With ``FaultPlan.none()`` the run is
+bitwise-identical to the in-process engine; the engine's full mutable
+state is an :class:`AsyncPlaneState` that checkpoints and resumes
+exactly.
 """
 from __future__ import annotations
 
@@ -70,7 +85,7 @@ from repro.configs.base import VFLConfig
 from repro.core import zoo
 from repro.core.adapters import ModelAdapter, tabular_adapter
 from repro.core.methods import SYNC_METHODS
-from repro.core.privacy import Ledger
+from repro.core.privacy import Ledger, Message
 from repro.sharding.rules import PARAM_RULES, resolve_spec
 
 CLIENT_AXIS = "data"        # mesh axis the client block shards over
@@ -556,3 +571,385 @@ def _make_sync_step(adapter: ModelAdapter, transport, vfl: VFLConfig):
         return params, table, h
 
     return step
+
+
+# ===================================================== population plane ====
+
+@dataclasses.dataclass(frozen=True)
+class PopulationConfig:
+    """Population-scale knobs on top of the sampled activation schedule.
+
+    ``admission_ms``: a delivered uplink slower than this virtual budget
+    is a straggler — the round proceeds without that client (its stale
+    table row serves instead; it retries at its next activation).
+    ``staleness_bound``: a registered client whose table rows are older
+    than this many rounds is force-activated, replacing sampled block
+    members from the end (VAFL's bounded-delay assumption, enforced by
+    admission instead of assumed)."""
+    admission_ms: Optional[float] = None
+    staleness_bound: Optional[int] = None
+
+
+@dataclasses.dataclass
+class AsyncPlaneState:
+    """The async engine's FULL mutable state between rounds — everything
+    a checkpoint must carry for a killed run to resume bitwise: the
+    embedding table, the delay counters, the per-client activity clock
+    for bounded-staleness forcing, the virtual wall clock, and the fault
+    counters. The RNG needs no state: every stream (schedule, batches,
+    directions, noise, faults) is a pure function of (seed, round)."""
+    step: int
+    table: np.ndarray
+    delays: np.ndarray
+    last_active: np.ndarray
+    clock_ms: float = 0.0
+    max_delay_seen: int = 0
+    counters: dict = dataclasses.field(default_factory=dict)
+    seed: int = 0
+
+    def save(self, path: str) -> None:
+        from repro.checkpoint.io import save_checkpoint
+        save_checkpoint(path, {"table": np.asarray(self.table),
+                               "delays": np.asarray(self.delays),
+                               "last_active": np.asarray(self.last_active)},
+                        step=self.step,
+                        metadata={"clock_ms": float(self.clock_ms),
+                                  "max_delay_seen": int(self.max_delay_seen),
+                                  "counters": dict(self.counters),
+                                  "seed": int(self.seed)})
+
+    @classmethod
+    def load(cls, path: str) -> "AsyncPlaneState":
+        from repro.checkpoint.io import load_tree
+        tree, step, meta = load_tree(path)
+        return cls(step=int(step),
+                   table=np.asarray(tree["table"]),
+                   delays=np.asarray(tree["delays"]),
+                   last_active=np.asarray(tree["last_active"]),
+                   clock_ms=float(meta["clock_ms"]),
+                   max_delay_seen=int(meta["max_delay_seen"]),
+                   counters=dict(meta["counters"]),
+                   seed=int(meta["seed"]))
+
+
+@dataclasses.dataclass
+class PopulationResult(EngineResult):
+    """:class:`EngineResult` plus the wire plane's measurements."""
+    state: Optional[AsyncPlaneState] = None
+    serialized_bytes: int = 0      # measured frame bytes (§V data plane)
+    overhead_bytes: int = 0        # serialization overhead over payloads
+    control_bytes: int = 0         # act/skip/collect/params frames
+    dp_releases: int = 0
+    stats: dict = dataclasses.field(default_factory=dict)
+
+
+@functools.lru_cache(maxsize=64)
+def _population_fns(adapter: ModelAdapter, transport, vfl: VFLConfig):
+    """Jitted server-side compute for the population engine, cached per
+    protocol (the worker side lives in ``repro.wire.worker``). The math
+    is the legacy scan body's, split at the wire: the server consumes
+    UPLOADED embedding lanes instead of running ``client_forward``."""
+    method = transport.method
+
+    def server_update(server, c_stale, c_fresh, m_adm, yb, key):
+        c_batch = c_stale.at[m_adm].set(c_fresh)
+        return _server_update(adapter, method, vfl, server, c_batch, yb,
+                              key)
+
+    def losses_fn(server, c_stale, m, emb_lanes, yb, key):
+        losses = jax.vmap(
+            lambda cf: adapter.server_loss(server, c_stale.at[m].set(cf),
+                                           yb))(emb_lanes)
+        return transport.downlink(losses, key)
+
+    return jax.jit(server_update), jax.jit(losses_fn)
+
+
+def _fresh_counters() -> dict:
+    return {"rounds": 0, "activations": 0, "admitted": 0,
+            "uplink_drops": 0, "stragglers": 0, "downlink_drops": 0,
+            "forced": 0, "degraded_rounds": 0, "retransmit_frames": 0}
+
+
+def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
+                   cfg_engine: EngineConfig, params, x_parts, y, *,
+                   probs=None, fault_plan=None,
+                   population: Optional[PopulationConfig] = None,
+                   channels: Optional[dict] = None,
+                   state: Optional[AsyncPlaneState] = None,
+                   ledger: Optional[Ledger] = None, dp_releases: int = 0,
+                   until: Optional[int] = None,
+                   stop_workers: bool = True) -> PopulationResult:
+    """The asynchronous protocol over a REAL wire with fault injection.
+
+    Every registered client (M = ``x_parts.shape[0]``) sits behind a
+    ``repro.wire`` endpoint — in-proc :class:`LoopbackBackend` workers by
+    default; pass ``channels={m: backend}`` to place party m behind an
+    already-connected endpoint (e.g. a :class:`SocketBackend` whose
+    worker process runs ``ClientWorker.serve``). Per round the sampled
+    block is activated over the wire (act -> 1+q embedding frames up ->
+    1+q loss frames down), the ledger meters each frame's ACTUAL
+    serialized bytes (``Message.wired``; payload formula kept as the
+    cross-check), and ``fault_plan`` decides drops/latency/retries in
+    deterministic virtual time. Graceful degradation: a dropped or
+    straggling client simply misses the round (its stale embeddings
+    serve; the server still steps), so a 20% dropout rate slows
+    convergence instead of hanging the round.
+
+    ``state``/``until`` make the plane durable: ``until=k`` stops after
+    round k and returns the full :class:`AsyncPlaneState`; passing that
+    state back (with the SAME configs/seed and the collected params)
+    continues bitwise — both halves replay the identical schedule, RNG
+    and fault streams. ``ledger``/``dp_releases`` extend a restored
+    run's accounting the same way.
+
+    With ``FaultPlan.none()`` and no population knobs the result is
+    bitwise-identical to :func:`run` (losses, params, table, delays).
+    """
+    from repro.wire import codec
+    from repro.wire.backend import LoopbackBackend
+    from repro.wire.faults import FaultPlan
+    from repro.wire.worker import ClientWorker
+
+    method = transport.method
+    if method in SYNC_METHODS or method == "vafl":
+        raise ValueError(
+            f"run_population drives the asynchronous ZOO wire; {method!r} "
+            "is synchronous or sends gradients down (use run())")
+    if cfg_engine.use_lanes:
+        raise ValueError(
+            "use_lanes routes the fan-out through a fused server-side "
+            "kernel; the wire worker computes its own lanes")
+    if cfg_engine.mesh_shards:
+        raise ValueError("the population engine shards by PROCESS, not by "
+                         "device mesh; set mesh_shards=0")
+    if vfl.zoo_unrolled_oracle:
+        raise ValueError("the wire protocol speaks the stacked lane path; "
+                         "zoo_unrolled_oracle is the in-process test oracle")
+
+    plan = fault_plan if fault_plan is not None else FaultPlan.none()
+    pop = population if population is not None else PopulationConfig()
+    M, n, _ = x_parts.shape
+    T, bs = cfg_engine.steps, cfg_engine.batch_size
+    block = cfg_engine.block_size
+    q = vfl.zoo_queries
+
+    key = jax.random.key(cfg_engine.seed)
+    k_sched, k_idx, k_zoo = jax.random.split(key, 3)
+    schedule = make_schedule(k_sched, T, M, probs, block)
+    if schedule.ndim == 1:
+        schedule = schedule[:, None]
+    schedule_h = np.asarray(schedule)                     # (T, block)
+    idx_h = np.asarray(jax.random.randint(k_idx, (T, bs), 0, n))
+    zoo_keys = jax.random.split(k_zoo, T)
+
+    server = params["server"]
+    if state is None:
+        table = jax.vmap(adapter.client_forward)(params["clients"],
+                                                 x_parts)  # (M, n, e)
+        delays = np.zeros((M, n), np.int32)
+        last_active = np.zeros((M,), np.int32)
+        clock_ms, maxd, start = 0.0, 0, 0
+        counters = _fresh_counters()
+    else:
+        if state.seed != cfg_engine.seed:
+            raise ValueError(
+                f"resume state was produced under seed {state.seed}, "
+                f"engine runs seed {cfg_engine.seed} — the schedule/RNG "
+                "streams would diverge from the saved run")
+        table = jnp.asarray(state.table)
+        delays = np.array(state.delays, np.int32)
+        last_active = np.array(state.last_active, np.int32)
+        clock_ms, maxd = float(state.clock_ms), int(state.max_delay_seen)
+        counters = {**_fresh_counters(), **state.counters}
+        start = int(state.step)
+    stop_at = T if until is None else min(int(until), T)
+    if not start <= stop_at:
+        raise ValueError(f"resume step {start} is past until={stop_at}")
+    ledger = ledger if ledger is not None else Ledger()
+    control_bytes = int(counters.pop("control_bytes", 0))
+    noise_on = transport.noise is not None
+
+    # ---- wire up the population: loopback workers for unplaced parties --
+    channels = dict(channels or {})
+    local_workers: dict = {}
+    for m in range(M):
+        if m not in channels:
+            eng_end, wk_end = LoopbackBackend.pair()
+            local_workers[m] = ClientWorker(
+                adapter, vfl,
+                jax.tree.map(lambda a: a[m], params["clients"]),
+                x_parts[m], m, wk_end)
+            channels[m] = eng_end
+
+    def _pump(m):
+        if m in local_workers:
+            local_workers[m].pump()
+
+    def _send_control(m, msg):
+        nonlocal control_bytes
+        control_bytes += channels[m].send(msg)
+        _pump(m)
+
+    server_update, losses_fn = _population_fns(adapter, transport, vfl)
+    losses_out = []
+
+    for t in range(start, stop_at):
+        m_blk = [int(m) for m in schedule_h[t]]
+        idx = idx_h[t]
+        kt = zoo_keys[t]
+        counters["rounds"] += 1
+
+        # ---- bounded-staleness forcing: overdue clients preempt the ----
+        # ---- sampled block (most-stale first, replacing from the end) --
+        if pop.staleness_bound is not None:
+            in_blk = set(m_blk)
+            overdue = sorted(
+                ((t - int(last_active[m]), m) for m in range(M)
+                 if m not in in_blk
+                 and t - int(last_active[m]) > pop.staleness_bound),
+                key=lambda sm: (-sm[0], sm[1]))
+            for i, (_, m) in enumerate(overdue[:len(m_blk)]):
+                m_blk[len(m_blk) - 1 - i] = m
+            counters["forced"] += min(len(overdue), len(m_blk))
+
+        keys_r = _row_keys(kt, jnp.arange(len(m_blk)))
+
+        # ---- phase 1: activate the block, collect uplinked lanes --------
+        admitted = []               # (r, m, emb_lanes host arrays)
+        emb_meter: list = [[] for _ in m_blk]   # (Message, copies)
+        loss_meter: list = [[] for _ in m_blk]
+        round_ms = 0.0
+        for r, m in enumerate(m_blk):
+            counters["activations"] += 1
+            kd = np.asarray(jax.random.key_data(keys_r[r]))
+            _send_control(m, codec.WireMessage(
+                "act", "server", t, {"party": m}, {"idx": idx, "key": kd}))
+            lanes = []
+            for _ in range(1 + q):
+                msg, nb = channels[m].recv()
+                if msg.tag != "emb":  # pragma: no cover - protocol error
+                    raise ValueError(f"expected emb frame, got {msg.tag!r}")
+                arr = msg.payload["c"]
+                lanes.append(arr)
+                up = plan.delivery(t, m, "up")
+                emb_meter[r].append((Message(
+                    "client", "embedding", tuple(arr.shape),
+                    str(arr.dtype), wired=nb), up.attempts))
+            counters["retransmit_frames"] += (up.attempts - 1) * (1 + q)
+            client_ms = up.elapsed_ms
+            if not up.ok:
+                counters["uplink_drops"] += 1
+                _send_control(m, codec.WireMessage(
+                    "skip", "server", t, {"reason": "drop"}))
+            elif (pop.admission_ms is not None
+                  and up.elapsed_ms > pop.admission_ms):
+                counters["stragglers"] += 1
+                _send_control(m, codec.WireMessage(
+                    "skip", "server", t, {"reason": "straggler"}))
+            else:
+                admitted.append((r, m, lanes))
+            round_ms = max(round_ms, client_ms)
+
+        # ---- phase 2: server step on stale table + admitted fresh -------
+        c_stale = table[:, idx]
+        e = int(table.shape[-1])
+        if admitted:
+            m_adm = jnp.asarray([m for _, m, _ in admitted], jnp.int32)
+            c_fresh = jnp.stack([jnp.asarray(l[0]) for _, _, l in admitted])
+        else:
+            counters["degraded_rounds"] += 1
+            m_adm = jnp.zeros((0,), jnp.int32)
+            c_fresh = jnp.zeros((0, bs, e), table.dtype)
+        server, h = server_update(server, c_stale, c_fresh, m_adm,
+                                  y[idx], kt)
+        losses_out.append(np.asarray(h))
+
+        # ---- phase 3: loss downlinks to admitted clients ----------------
+        for r, m, lanes in admitted:
+            emb_lanes = jnp.stack([jnp.asarray(a) for a in lanes])
+            losses = losses_fn(server, c_stale, m, emb_lanes, y[idx],
+                               keys_r[r])
+            down = plan.delivery(t, m, "down")
+            losses_h = np.asarray(losses)
+            for lane in range(1 + q):
+                nb = channels[m].send(codec.WireMessage(
+                    "loss", "server", t,
+                    {"lane": lane, "delivered": bool(down.ok)},
+                    {"h": losses_h[lane]}))
+                loss_meter[r].append((Message(
+                    "server", "loss", (), str(losses_h.dtype), wired=nb),
+                    down.attempts))
+            _pump(m)
+            counters["retransmit_frames"] += (down.attempts - 1) * (1 + q)
+            if noise_on:
+                dp_releases += 1 + q
+            if not down.ok:
+                counters["downlink_drops"] += 1
+            round_ms = max(round_ms, plan.delivery(t, m, "up").elapsed_ms
+                           + down.elapsed_ms)
+
+        # ---- ledger: per client in block order, uplinks then downlinks --
+        # (matches the legacy per-client round_messages grouping)
+        for r in range(len(m_blk)):
+            for msg_rec, copies in emb_meter[r] + loss_meter[r]:
+                transport.account_wire(msg_rec, copies=copies,
+                                       ledger=ledger)
+        counters["admitted"] += len(admitted)
+
+        # ---- phase 4: table/delay/clock bookkeeping ---------------------
+        delays += 1
+        if admitted:
+            adm_rows = np.asarray([m for _, m, _ in admitted])
+            table = table.at[jnp.asarray(adm_rows)[:, None],
+                             jnp.asarray(idx)[None, :]].set(c_fresh)
+            delays[adm_rows[:, None], idx[None, :]] = 0
+            last_active[adm_rows] = t
+        maxd = max(maxd, int(delays.max()))
+        clock_ms += round_ms
+
+    # ---- collect the population's parameters back over the wire --------
+    rows = []
+    for m in range(M):
+        _send_control(m, codec.WireMessage("collect", "server", stop_at))
+        msg, nb = channels[m].recv()
+        if msg.tag != "params":  # pragma: no cover - protocol error
+            raise ValueError(f"expected params frame, got {msg.tag!r}")
+        control_bytes += nb
+        rows.append(jax.tree.map(jnp.asarray,
+                                 codec.unflatten_tree(msg.payload)))
+    clients = jax.tree.map(lambda *rs: jnp.stack(rs), *rows)
+    if stop_workers:
+        for m in range(M):
+            _send_control(m, codec.WireMessage("stop", "server", stop_at))
+
+    counters["control_bytes"] = control_bytes
+    out_state = AsyncPlaneState(
+        step=stop_at, table=np.asarray(table), delays=delays,
+        last_active=last_active, clock_ms=clock_ms, max_delay_seen=maxd,
+        counters=counters, seed=cfg_engine.seed)
+    eps, delta = transport.privacy_spent(dp_releases)
+    executed = stop_at - start
+    formula = transport.account(batch=bs, embed=int(table.shape[-1]),
+                                zoo_queries=q, n_clients=block,
+                                n_rounds=executed)
+    stats = {
+        "rounds_executed": executed,
+        "virtual_ms": clock_ms,
+        "formula_bytes": formula.total_bytes,
+        "participation": (counters["admitted"]
+                          / max(counters["activations"], 1)),
+        **{k: counters[k] for k in ("uplink_drops", "stragglers",
+                                    "downlink_drops", "forced",
+                                    "degraded_rounds",
+                                    "retransmit_frames")},
+    }
+    return PopulationResult(
+        params={"clients": clients, "server": server},
+        losses=np.asarray(losses_out), max_delay_seen=maxd,
+        mean_delay=float(delays.mean()), wire_bytes=ledger.total_bytes,
+        transmits_gradients=ledger.transmits_gradients, ledger=ledger,
+        epsilon=eps, delta=delta, state=out_state,
+        serialized_bytes=ledger.serialized_bytes,
+        overhead_bytes=ledger.overhead_bytes, control_bytes=control_bytes,
+        dp_releases=dp_releases, stats=stats)

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,10 +44,27 @@ class Message:
     kind: str          # "embedding" | "loss" | "partial_derivative"
     shape: Tuple[int, ...]
     dtype: str = "float32"
+    # MEASURED bytes on the wire (the serialized frame, length prefix and
+    # header included) when this message crossed a real ``repro.wire``
+    # backend; None for formula-only accounting. ``nbytes`` stays the
+    # payload formula either way, so the formula count survives as a
+    # cross-check against the measurement.
+    wired: Optional[int] = None
 
     @property
     def nbytes(self) -> int:
         return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+    @property
+    def bytes_on_wire(self) -> int:
+        """Measured frame size when available, formula count otherwise."""
+        return self.nbytes if self.wired is None else self.wired
+
+    @property
+    def overhead(self) -> int:
+        """Serialization overhead over the payload formula (0 when the
+        message never crossed a measuring backend)."""
+        return 0 if self.wired is None else self.wired - self.nbytes
 
 
 def serve_messages(batch: int, embed: int,
@@ -115,6 +132,21 @@ class Ledger:
         return sum(m.nbytes for m in self.messages)
 
     @property
+    def serialized_bytes(self) -> int:
+        """Actual bytes on the wire: the measured frame size for messages
+        that crossed a ``repro.wire`` backend, the payload formula for the
+        rest. ≥ :attr:`total_bytes` whenever every measurement carries its
+        framing/header overhead."""
+        return sum(m.bytes_on_wire for m in self.messages)
+
+    @property
+    def overhead_bytes(self) -> int:
+        """Total measured serialization overhead (headers, length
+        prefixes) — ``serialized_bytes - total_bytes`` restricted to the
+        measured messages."""
+        return sum(m.overhead for m in self.messages)
+
+    @property
     def transmits_gradients(self) -> bool:
         """True iff any internal information leaves a party (§V violated)."""
         return any(m.kind in GRADIENT_KINDS for m in self.messages)
@@ -139,14 +171,20 @@ class Ledger:
                 order.append(m)
             counts[m] = counts.get(m, 0) + 1
         return [[m.sender, m.kind, list(m.shape), m.dtype, counts[m]]
+                + ([] if m.wired is None else [m.wired])
                 for m in order]
 
     @classmethod
     def from_counts(cls, counts: List[list]) -> "Ledger":
+        # rows are [sender, kind, shape, dtype, count] with an optional
+        # trailing measured-bytes entry — checkpoints written before the
+        # wire plane carry 5-element rows and still load
         led = cls()
-        for sender, kind, shape, dtype, n in counts:
+        for row in counts:
+            sender, kind, shape, dtype, n = row[:5]
+            wired = int(row[5]) if len(row) > 5 else None
             led.messages.extend([Message(sender, kind, tuple(shape),
-                                         dtype)] * int(n))
+                                         dtype, wired=wired)] * int(n))
         return led
 
 

@@ -71,6 +71,11 @@ class SessionState:
     opt_state: Optional[Any] = None
     ledger: Ledger = dataclasses.field(default_factory=Ledger)
     dp_releases: int = 0
+    # the population engine's full mutable state (embedding table, delay
+    # counters, activity clock, fault counters) — set when the checkpoint
+    # was taken mid-``run_population``, so the resumed wire run replays
+    # the remaining rounds bitwise (see async_engine.AsyncPlaneState)
+    async_state: Optional[async_engine.AsyncPlaneState] = None
     # the free-form metadata the saver passed to ``fed.save`` (driver
     # knobs like batch/seed/schedule live here, not in the session)
     metadata: dict = dataclasses.field(default_factory=dict)
@@ -203,6 +208,30 @@ class Federation:
             self.adapter, self.transport, self.vfl, self.engine,
             params, x_parts, y, probs=probs, mesh=self.mesh)
 
+    def run_population(self, params, x_parts, y, *, probs=None,
+                       fault_plan=None, population=None, channels=None,
+                       state=None, ledger: Optional[Ledger] = None,
+                       dp_releases: int = 0, until: Optional[int] = None,
+                       stop_workers: bool = True
+                       ) -> "async_engine.PopulationResult":
+        """The asynchronous protocol over the REAL wire (``repro.wire``).
+
+        Same schedule/RNG/staleness semantics as :meth:`run` — with
+        ``FaultPlan.none()`` the two are bitwise-identical — but every
+        client sits behind a wire backend (in-proc loopback by default;
+        ``channels={m: backend}`` places party m behind e.g. a connected
+        socket whose worker process runs ``ClientWorker.serve``), frames
+        are genuinely serialized and metered at their actual byte size,
+        and ``fault_plan`` injects deterministic drops/latency.
+        ``state``/``until``/``ledger``/``dp_releases`` continue a
+        checkpointed run exactly (see :meth:`save`'s ``async_state``)."""
+        return async_engine.run_population(
+            self.adapter, self.transport, self.vfl, self.engine,
+            params, x_parts, y, probs=probs, fault_plan=fault_plan,
+            population=population, channels=channels, state=state,
+            ledger=ledger, dp_releases=dp_releases, until=until,
+            stop_workers=stop_workers)
+
     # ------------------------------------------------------- sync driver --
     def sync_step(self, optimizer, *, vocab: Optional[int] = None):
         """Jitted cascade/baseline step over the GLOBAL model's loss —
@@ -315,6 +344,7 @@ class Federation:
     def save(self, path: str, params, *, step: int = 0,
              opt_state: Optional[Any] = None,
              ledger: Optional[Ledger] = None, dp_releases: int = 0,
+             async_state: Optional[async_engine.AsyncPlaneState] = None,
              metadata: Optional[dict] = None) -> str:
         """Party-scoped checkpoint: one directory per party + session state.
 
@@ -327,6 +357,9 @@ class Federation:
               clients/         the client partition (global layout)
               opt_server/, opt_clients/   optimizer state, split on the
                                           same party boundary (optional)
+              async_plane/     the population engine's table/delay/clock
+                               state (optional — mid-``run_population``
+                               checkpoints; makes the resume bitwise)
 
         The isolation is structural (:mod:`repro.federation.parties`):
         the server handle cannot address a client leaf, so its directory
@@ -359,6 +392,8 @@ class Federation:
                             step=step)
             save_checkpoint(os.path.join(path, "opt_clients"), opt_c,
                             step=step)
+        if async_state is not None:
+            async_state.save(os.path.join(path, "async_plane"))
 
         ledger = ledger if ledger is not None else Ledger()
         eps, delta = self.transport.privacy_spent(dp_releases)
@@ -377,6 +412,7 @@ class Federation:
             "ledger_counts": ledger.to_counts(),
             "dp_releases": int(dp_releases),
             "dp_spent": [eps if math.isfinite(eps) else None, delta],
+            "async_plane": async_state is not None,
             "metadata": metadata or {},
         }
         with open(os.path.join(path, SESSION_MANIFEST), "w") as f:
@@ -430,10 +466,16 @@ class Federation:
             opt_state = fed._merge_opt_state(
                 opt_c, opt_s, manifest["layout"] == "engine")
 
+        async_state = None
+        if manifest.get("async_plane"):
+            async_state = async_engine.AsyncPlaneState.load(
+                os.path.join(path, "async_plane"))
+
         state = SessionState(
             step=manifest["step"], opt_state=opt_state,
             ledger=Ledger.from_counts(manifest["ledger_counts"]),
             dp_releases=manifest["dp_releases"],
+            async_state=async_state,
             metadata=manifest.get("metadata", {}))
         return fed, params, state
 

@@ -24,7 +24,8 @@ import jax
 from repro.analysis import tags
 from repro.core.methods import (SYNC_METHODS, ZOO_WIRE_METHODS,
                                 canonical_method)
-from repro.core.privacy import (GaussianLossChannel, Ledger, serve_messages)
+from repro.core.privacy import (GaussianLossChannel, Ledger, Message,
+                                serve_messages)
 
 # fold_in salt deriving the downlink-noise key from a round/row key (2 is
 # taken by the engine's per-row direction RNG; keep them disjoint)
@@ -122,6 +123,27 @@ class Transport:
         request would log."""
         return self.account_serve(batch=batch, embed=embed, n_steps=1,
                                   n_gen=1 if gen else 0, ledger=ledger)
+
+    @tags.accounting
+    def account_wire(self, message: Message, *, copies: int = 1,
+                     ledger: Optional[Ledger] = None) -> Ledger:
+        """Meter one MEASURED wire frame from a ``repro.wire`` backend.
+
+        ``message.wired`` carries the actual serialized byte count (frame
+        header + length prefix included), while ``message.nbytes`` stays
+        the per-round formula — so the ledger's ``serialized_bytes`` is a
+        measurement and ``total_bytes`` survives as its cross-check.
+        ``copies > 1`` logs retransmissions of the same frame (a
+        ``FaultPlan`` retry resends identical bytes, so dropped attempts
+        cost wire bytes without changing the payload accounting shape)."""
+        if message.wired is None:
+            raise ValueError(
+                "account_wire meters measured frames; build the Message "
+                "with wired=<serialized byte count> (use account()/"
+                "log_round for formula-only accounting)")
+        ledger = Ledger() if ledger is None else ledger
+        ledger.messages.extend([message] * copies)
+        return ledger
 
     def releases(self, *, n_rounds: int, n_clients: int = 1,
                  zoo_queries: int = 1) -> int:

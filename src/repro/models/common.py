@@ -10,6 +10,7 @@ pytree of :class:`ParamSpec` leaves. The same spec tree serves three uses:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional, Tuple
 
 import jax
@@ -55,14 +56,18 @@ def shardings(tree, mesh, rules: Rules = PARAM_RULES):
 
 def materialize(tree, key, dtype_override: Optional[str] = None):
     """Concrete init. Each leaf gets a key derived from its path so init is
-    order-independent and stable under refactors."""
+    order-independent, stable under refactors AND across processes (the
+    path digest is crc32, not the per-process-salted builtin ``hash`` —
+    a fresh run must draw the same parameters in every interpreter for
+    kill/resume traces to be comparable to straight-through runs)."""
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(
         tree, is_leaf=is_spec)[0]
     treedef = jax.tree.structure(tree, is_leaf=is_spec)
 
     def init_one(path, s: ParamSpec):
         pstr = "/".join(str(p) for p in path)
-        sub = jax.random.fold_in(key, np.uint32(hash(pstr) & 0x7FFFFFFF))
+        sub = jax.random.fold_in(
+            key, np.uint32(zlib.crc32(pstr.encode()) & 0x7FFFFFFF))
         dt = jnp.dtype(dtype_override or s.dtype)
         if s.init == "zeros":
             return jnp.zeros(s.shape, dt)

@@ -1,0 +1,28 @@
+"""``repro.wire`` — the wire plane: real transport backends under the
+``federation.Transport`` accounting interface.
+
+* :mod:`repro.wire.codec` — tagged, versioned messages and their byte
+  encoding (the checkpoint plane's uint-view codec, so bf16 payloads
+  round-trip losslessly).
+* :mod:`repro.wire.backend` — :class:`WireBackend` protocol with
+  :class:`LoopbackBackend` (in-proc queue, the default) and
+  :class:`SocketBackend` (length-prefixed TCP frames, so a client party
+  can run in another process).
+* :mod:`repro.wire.faults` — :class:`FaultPlan`: deterministic per-party
+  drop/latency/retry injection in virtual time.
+* :mod:`repro.wire.worker` — :class:`ClientWorker`: one client party
+  behind a wire endpoint.
+"""
+from repro.wire.backend import (LoopbackBackend, SocketBackend, WireBackend,
+                                WireClosed, WireTimeout, accept, listen)
+from repro.wire.codec import (WIRE_VERSION, WireMessage, decode, encode,
+                              frame)
+from repro.wire.faults import Delivery, FaultPlan
+from repro.wire.worker import ClientWorker
+
+__all__ = [
+    "WIRE_VERSION", "WireMessage", "encode", "decode", "frame",
+    "WireBackend", "LoopbackBackend", "SocketBackend", "WireClosed",
+    "WireTimeout", "listen", "accept",
+    "FaultPlan", "Delivery", "ClientWorker",
+]

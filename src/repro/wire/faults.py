@@ -1,0 +1,117 @@
+"""Deterministic fault injection for the wire plane.
+
+A :class:`FaultPlan` is a pure function from ``(seed, round, party,
+direction, attempt)`` to delivery outcomes: every decision draws from
+``np.random.default_rng`` seeded with exactly that tuple, so the plan
+carries NO mutable state — replaying round t after a checkpoint restore
+reproduces the straight-through run's drops, latencies and retries
+bit-for-bit, which is what makes the durable async plane exact.
+
+Time here is *virtual*: latencies, jitter and retry backoff accumulate
+into millisecond accounting (straggler admission, the engine's clock)
+without ever sleeping the host. The plan is an accounting and scheduling
+overlay on the real backend — a "dropped" frame still crosses the actual
+wire once (so remote workers stay in lockstep with the engine), but it
+costs the retried bytes and the timeout budget, and the engine treats the
+payload as undelivered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+# seed-tuple salt keeping the fault stream disjoint from anything else
+# seeded from small integers
+_SALT = 0x57495245  # "WIRE"
+_DIR = {"up": 0, "down": 1}
+
+
+class Delivery(NamedTuple):
+    """Outcome of delivering one logical payload over a faulty wire."""
+    ok: bool            # delivered within the retry budget
+    attempts: int       # frames actually transmitted (1 = clean)
+    elapsed_ms: float   # virtual wall time: timeouts + final latency
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Per-party drop/latency/retry model, deterministic from ``seed``.
+
+    ``drop`` / ``latency_ms`` / ``jitter_ms`` are the population-wide
+    defaults; ``party_drop`` / ``party_latency_ms`` override single
+    parties as ``((party, value), ...)`` pairs (tuples, not dicts — the
+    plan is hashable and frozen like every other protocol value object).
+    A failed attempt costs ``timeout_ms * backoff**attempt`` virtual ms;
+    after ``max_retries`` retries the payload is undelivered and the
+    engine degrades (skips the party's round) instead of hanging."""
+    seed: int = 0
+    drop: float = 0.0
+    latency_ms: float = 0.0
+    jitter_ms: float = 0.0
+    timeout_ms: float = 100.0
+    max_retries: int = 3
+    backoff: float = 2.0
+    party_drop: Tuple[Tuple[int, float], ...] = ()
+    party_latency_ms: Tuple[Tuple[int, float], ...] = ()
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.drop < 1.0:
+            raise ValueError(f"drop must be in [0, 1), got {self.drop}")
+        if self.max_retries < 0 or self.timeout_ms < 0:
+            raise ValueError(
+                f"need max_retries >= 0 and timeout_ms >= 0, got "
+                f"{self.max_retries}, {self.timeout_ms}")
+        for party, p in self.party_drop:
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(
+                    f"party_drop[{party}] must be in [0, 1], got {p}")
+
+    @classmethod
+    def none(cls) -> "FaultPlan":
+        """The clean wire: every delivery succeeds in one attempt at zero
+        virtual latency (the bitwise-parity configuration)."""
+        return cls()
+
+    @property
+    def active(self) -> bool:
+        return bool(self.drop or self.latency_ms or self.jitter_ms
+                    or self.party_drop or self.party_latency_ms)
+
+    # ------------------------------------------------------------ knobs --
+    def drop_for(self, party: int) -> float:
+        for m, p in self.party_drop:
+            if m == party:
+                return p
+        return self.drop
+
+    def latency_for(self, party: int) -> float:
+        for m, l in self.party_latency_ms:
+            if m == party:
+                return l
+        return self.latency_ms
+
+    # ---------------------------------------------------------- sampling --
+    def _rng(self, rnd: int, party: int, direction: str,
+             attempt: int) -> np.random.Generator:
+        return np.random.default_rng(
+            (self.seed, _SALT, rnd, party, _DIR[direction], attempt))
+
+    def delivery(self, rnd: int, party: int, direction: str) -> Delivery:
+        """Deliver one payload, retrying dropped attempts with exponential
+        backoff. Pure in (seed, rnd, party, direction)."""
+        if not self.active:
+            return Delivery(True, 1, 0.0)
+        p_drop = self.drop_for(party)
+        latency = self.latency_for(party)
+        elapsed = 0.0
+        for attempt in range(self.max_retries + 1):
+            rng = self._rng(rnd, party, direction, attempt)
+            if rng.uniform() < p_drop:
+                elapsed += self.timeout_ms * self.backoff ** attempt
+                continue
+            lat = (rng.normal(latency, self.jitter_ms) if self.jitter_ms
+                   else latency)
+            return Delivery(True, attempt + 1, elapsed + max(0.0, lat))
+        return Delivery(False, self.max_retries + 1, elapsed)

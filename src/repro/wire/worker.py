@@ -1,0 +1,197 @@
+"""The client party's side of the wire protocol.
+
+A :class:`ClientWorker` owns ONE client's parameters and feature slice
+and speaks the population engine's message protocol over any
+:class:`~repro.wire.backend.WireBackend`:
+
+    act      engine -> client   batch indices + this round's row key
+    emb      client -> engine   1 clean + q perturbed embeddings (§V uplink)
+    loss     engine -> client   1 clean + q perturbed scalar losses
+    skip     engine -> client   round aborted (drop / straggler) — clear state
+    collect  engine -> client   request the parameter tree
+    params   client -> engine   the flattened parameter tree
+    stop     engine -> client   exit the serve loop
+
+The compute path is the SAME lane decomposition the in-process engine
+jits (``zoo.sample_directions`` → ``stack_lanes`` → batched
+``client_forward`` → ``grad_from_losses``), split at the party boundary:
+the worker evaluates the (1+q) client forwards, the engine evaluates the
+(1+q) server losses. At a fixed row key both sides draw and combine the
+exact values of the legacy single-process round, which is what makes the
+zero-fault wire run bitwise-identical to ``async_engine.run``.
+
+The worker never sees the server's parameters, any other client's
+embeddings, or a gradient — its only inputs from the wire are batch
+indices, an RNG key, and (1+q) scalar losses that already passed
+``Transport.downlink`` on the server side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import tags
+from repro.configs.base import VFLConfig
+from repro.core import zoo
+from repro.core.adapters import ModelAdapter
+from repro.wire import codec
+from repro.wire.backend import WireBackend, WireTimeout
+from repro.wire.codec import WireMessage
+
+
+@functools.lru_cache(maxsize=64)
+def _client_fns(adapter: ModelAdapter, vfl: VFLConfig):
+    """Jitted per-(adapter, vfl) client compute: the uplink fan-out and
+    the ZOO update. Cached so every worker of a population shares the
+    same compiled executables."""
+
+    @tags.party("client")
+    def uplink(client_m, xb, key):
+        """(1+q)-lane embedding fan-out for one round.
+
+        Mirrors ``zoo_gradient``'s stacked path exactly (same direction
+        draws at the same key); lane 0 is the clean forward — the
+        embedding the engine's table refresh stores."""
+        mask = (adapter.row_mask(client_m, xb)
+                if adapter.row_mask is not None else None)
+        u_stack, d_eff = zoo.sample_directions(
+            key, client_m, vfl.zoo_queries, vfl.zoo_dist, mask)
+        phi = zoo.phi_factor(vfl.zoo_dist, d_eff)
+        lanes = zoo.stack_lanes(client_m, u_stack, vfl.mu)
+        emb_lanes = jax.vmap(
+            lambda cm: adapter.client_forward(cm, xb))(lanes)
+        return u_stack, phi, emb_lanes
+
+    @tags.party("client")
+    def _apply(client_m, g):
+        return jax.tree.map(
+            lambda w, gg: (w - vfl.lr_client * gg).astype(w.dtype),
+            client_m, g)
+
+    apply_jit = jax.jit(_apply)
+
+    @tags.party("client")
+    def update(client_m, u_stack, phi, losses):
+        """One ZOO step from the downlinked (1+q) scalar losses.
+
+        The jit split here is load-bearing for bitwise parity with
+        ``async_engine.run``: the (q,)-coefficient contraction runs EAGER
+        (a standalone-compiled tensordot picks different fusion/FMA than
+        the same op inside the legacy scan body; the eager kernel matches
+        it), while the SGD apply runs in its OWN jit (the scan body's
+        fused multiply-add — eager mul+sub does not reproduce it)."""
+        g = zoo.grad_from_losses(u_stack, losses[1:], losses[0],
+                                 vfl.mu, phi)
+        return apply_jit(client_m, g)
+
+    return jax.jit(uplink), update
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One in-flight round: the direction stack the update needs, plus
+    the loss lanes as they arrive."""
+    round: int
+    u_stack: Any
+    phi: Any
+    losses: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    delivered: bool = True
+
+
+class ClientWorker:
+    """One client party behind a wire endpoint.
+
+    ``client_params`` is this client's UNstacked parameter pytree (one
+    row of the engine layout); ``x_m`` its full vertical feature slice.
+    Drive it with :meth:`pump` (loopback, engine-pumped) or :meth:`serve`
+    (blocking loop for a worker process)."""
+
+    def __init__(self, adapter: ModelAdapter, vfl: VFLConfig,
+                 client_params, x_m, index: int,
+                 backend: WireBackend) -> None:
+        self.adapter = adapter
+        self.vfl = vfl
+        self.client_params = client_params
+        self.x_m = jnp.asarray(x_m)
+        self.index = index
+        self.backend = backend
+        self._uplink, self._update = _client_fns(adapter, vfl)
+        self._pending: Optional[_Pending] = None
+        self._stopped = False
+
+    # ------------------------------------------------------------ driving --
+    def pump(self) -> int:
+        """Process every queued message (loopback mode); returns how many
+        were handled."""
+        handled = 0
+        while not self._stopped:
+            try:
+                msg, _ = self.backend.recv(timeout=0.0)
+            except WireTimeout:
+                break
+            self._handle(msg)
+            handled += 1
+        return handled
+
+    def serve(self, timeout: Optional[float] = None) -> None:
+        """Blocking message loop (socket mode, worker process): run until
+        the engine sends ``stop`` or the wire dies."""
+        while not self._stopped:
+            msg, _ = self.backend.recv(timeout=timeout)
+            self._handle(msg)
+
+    # ----------------------------------------------------------- protocol --
+    def _handle(self, msg: WireMessage) -> None:
+        if msg.tag == "act":
+            self._on_act(msg)
+        elif msg.tag == "loss":
+            self._on_loss(msg)
+        elif msg.tag == "skip":
+            self._pending = None
+        elif msg.tag == "collect":
+            self.backend.send(WireMessage(
+                "params", "client", msg.round, {"party": self.index},
+                codec.flatten_tree(self.client_params)))
+        elif msg.tag == "stop":
+            self._stopped = True
+        else:  # pragma: no cover - protocol error
+            raise ValueError(f"client worker got unexpected {msg.tag!r}")
+
+    @tags.wire("up", accounted_by="Transport.account_wire", kind="embedding",
+               reason="the §V uplink: 1 clean + q perturbed embeddings per "
+                      "activated round, each frame metered at its "
+                      "serialized size by the engine")
+    def _on_act(self, msg: WireMessage) -> None:
+        key = jax.random.wrap_key_data(jnp.asarray(msg.payload["key"]))
+        xb = self.x_m[jnp.asarray(msg.payload["idx"])]
+        u_stack, phi, emb_lanes = self._uplink(self.client_params, xb, key)
+        self._pending = _Pending(round=msg.round, u_stack=u_stack, phi=phi)
+        emb_h = np.asarray(emb_lanes)
+        for lane in range(emb_h.shape[0]):
+            self.backend.send(WireMessage(
+                "emb", "client", msg.round,
+                {"party": self.index, "lane": lane},
+                {"c": emb_h[lane]}))
+
+    def _on_loss(self, msg: WireMessage) -> None:
+        pend = self._pending
+        if pend is None or msg.round != pend.round:
+            # losses for a round the engine already skipped — drop them
+            return
+        pend.losses[int(msg.meta["lane"])] = msg.payload["h"]
+        pend.delivered = pend.delivered and bool(
+            msg.meta.get("delivered", True))
+        if len(pend.losses) < 1 + self.vfl.zoo_queries:
+            return
+        self._pending = None
+        if not pend.delivered:
+            return  # downlink lost after retries: no update this round
+        losses = jnp.asarray(np.stack(
+            [pend.losses[i] for i in range(len(pend.losses))]))
+        self.client_params = self._update(self.client_params, pend.u_stack,
+                                          pend.phi, losses)

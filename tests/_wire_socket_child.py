@@ -1,0 +1,41 @@
+"""Worker process for the socket-backend parity test.
+
+Rebuilds the SAME party state the parent's loopback run uses — the
+param init is cross-process deterministic (path-crc32 keys in
+``common.materialize``), so this process can materialize its client row
+instead of shipping parameters out of band — then serves one client
+party over a :class:`SocketBackend` until the engine says stop.
+
+Usage: python _wire_socket_child.py <port> <party>
+"""
+import sys
+
+import jax
+
+from repro.configs import VFLConfig
+from repro.configs.paper_mlp import PaperMLPConfig
+from repro.core.adapters import tabular_adapter
+from repro.data import make_classification, vertical_partition
+from repro.models import common, tabular
+from repro.wire import ClientWorker, SocketBackend
+
+
+def main():
+    port, party = int(sys.argv[1]), int(sys.argv[2])
+    cfg = PaperMLPConfig(n_features=32, n_classes=4, n_clients=4,
+                         client_embed=16, server_embed=32)
+    X, _ = make_classification(0, 256, cfg.n_features, cfg.n_classes)
+    Xp = vertical_partition(X, cfg.n_clients)
+    params = common.materialize(tabular.param_specs(cfg), jax.random.key(0))
+    vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=0.05, zoo_queries=2)
+    worker = ClientWorker(
+        tabular_adapter(cfg), vfl,
+        jax.tree.map(lambda a: a[party], params["clients"]),
+        Xp[party], party,
+        SocketBackend.connect("127.0.0.1", port))
+    worker.serve()
+    print("CHILD_OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -366,3 +366,66 @@ def test_session_state_defaults():
     s = SessionState()
     assert s.step == 0 and s.ledger.total_bytes == 0
     assert s.dp_spent(Transport("cascaded")) == (math.inf, 0.0)
+    assert s.async_state is None
+
+
+# ------------------------------------- durable async plane (wire plane) ---
+
+def test_population_resume_under_faults(tmp_path):
+    """ISSUE acceptance: kill a faulted ``run_population`` at round k,
+    ``fed.save`` the async plane, ``Federation.restore``, continue — the
+    combined trace is the straight-through run bitwise, with ledger
+    multiset/byte totals and the DP budget exactly continued."""
+    import collections
+
+    from repro.configs.paper_mlp import PaperMLPConfig
+    from repro.data import make_classification, vertical_partition
+    from repro.wire import FaultPlan
+
+    cfg = PaperMLPConfig(n_features=32, n_classes=4, n_clients=4,
+                         client_embed=16, server_embed=32)
+    X, y = make_classification(0, 256, cfg.n_features, cfg.n_classes)
+    Xp = jnp.asarray(vertical_partition(X, cfg.n_clients))
+    y = jnp.asarray(y)
+    noise = GaussianLossChannel(clip=10.0, epsilon=1.0)
+    vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=0.05)
+    ec = EngineConfig(method="cascaded", steps=16, batch_size=8)
+    plan = FaultPlan(seed=5, drop=0.25, latency_ms=2.0, max_retries=1)
+
+    fed = Federation.build(cfg, vfl, ec, noise=noise)
+    params = fed.init_params(jax.random.key(0))
+    full = fed.run_population(params, Xp, y, fault_plan=plan)
+
+    half = fed.run_population(params, Xp, y, fault_plan=plan, until=7)
+    path = fed.save(str(tmp_path / "ck"), half.params,
+                    step=half.state.step, ledger=half.ledger,
+                    dp_releases=half.dp_releases,
+                    async_state=half.state)
+    manifest = json.load(open(os.path.join(path, "session.json")))
+    assert manifest["async_plane"] is True
+    assert os.path.isdir(os.path.join(path, "async_plane"))
+
+    fed2, params2, state = Federation.restore(path)
+    assert state.async_state is not None and state.async_state.step == 7
+    cont = fed2.run_population(params2, Xp, y, fault_plan=plan,
+                               state=state.async_state,
+                               ledger=state.ledger,
+                               dp_releases=state.dp_releases)
+    assert np.array_equal(full.losses[7:], cont.losses)
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(full.params),
+            jax.tree_util.tree_leaves_with_path(cont.params)):
+        assert jnp.array_equal(a, b), pa
+    np.testing.assert_array_equal(full.state.delays, cont.state.delays)
+    np.testing.assert_array_equal(full.state.last_active,
+                                  cont.state.last_active)
+    assert full.state.clock_ms == cont.state.clock_ms
+    # accounting continues exactly: message multiset, byte totals, DP
+    assert (collections.Counter(full.ledger.messages)
+            == collections.Counter(cont.ledger.messages))
+    assert full.serialized_bytes == cont.serialized_bytes
+    assert full.dp_releases == cont.dp_releases
+    assert (full.epsilon, full.delta) == (cont.epsilon, cont.delta)
+    assert np.isfinite(cont.epsilon)
+    # the faults actually fired across the kill point
+    assert (cont.stats["uplink_drops"] + cont.stats["downlink_drops"]) > 0
