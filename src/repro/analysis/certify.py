@@ -1,0 +1,491 @@
+"""Boundary certification driver (``python -m repro.analysis certify``).
+
+Builds a real :class:`~repro.federation.session.Federation` for every
+shipped method configuration, traces the EXACT step closure its engine
+jits (``Federation.traceable_train_step`` / the population server pair /
+the serve plane's decode scan), runs the :mod:`repro.analysis.ifc` taint
+pass over the jaxpr, and evaluates:
+
+* **IF301–IF303** — :func:`ifc.check_flows` on each report;
+* **IF304** — the traced crossing inventory must match what the wire
+  plane actually serializes: payload kinds against
+  :data:`repro.wire.codec.DATA_TAGS` (+ the serve plane's token frame),
+  per-round element counts against the :func:`privacy.round_messages` /
+  :func:`privacy.serve_messages` ledger formulas, no
+  :data:`privacy.GRADIENT_KINDS` message on a certified wire, and — for
+  the device-sharded engine — every HLO collective restricted to
+  intra-server kinds (``all-gather``/``all-reduce``; collectives move
+  data between *server* shards, never across the party boundary).
+
+``vafl`` and ``split`` are certified as NEGATIVE CONTROLS: their wire is
+declared leaky (FOO downlink), so the certifier must trip IF301 on them
+— if it does not, the gradient anchor is broken and certification of the
+safe methods is vacuous, which is itself reported as a finding.
+
+The result is ``CERT_boundary.json``: machine-readable per-method
+crossing inventories + the rule verdicts, regenerated (never trusted
+stale) on every run. Exit status is non-zero iff any finding survives.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import ifc
+from repro.analysis.findings import Finding
+from repro.configs import get_config
+from repro.configs.base import VFLConfig, reduced
+from repro.configs.paper_mlp import PaperMLPConfig
+from repro.core import adapters, async_engine, privacy
+from repro.core.methods import CASCADED, SPLIT, SYN_ZOO, VAFL, ZOO_VFL
+from repro.core.privacy import GaussianLossChannel
+from repro.federation import serving
+from repro.federation.session import Federation
+from repro.utils import hlo
+from repro.wire import codec
+
+DEFAULT_OUT = "CERT_boundary.json"
+
+#: crossing kind -> the privacy-ledger Message.kind it serializes as
+KIND_TO_MESSAGE = {"emb": "embedding", "loss": "loss", "token": "token"}
+
+#: collective kinds the sharded server step may emit (server-internal
+#: resharding; anything else would be a new cross-device channel)
+SERVER_COLLECTIVES = frozenset({"all-gather", "all-reduce"})
+
+# ---- toy trace geometry (shapes only matter for the jaxpr) ---------------
+_Q = 2           # zoo_queries: 1 clean + 2 perturbed lanes
+_BLOCK = 2       # async block rows per round
+_BATCH = 4
+_ROWS = 16
+_TOY = PaperMLPConfig(n_features=8, n_classes=3, n_clients=2,
+                      client_embed=4, server_embed=6)
+
+
+def _cert_path(name: str) -> str:
+    return f"<certify:{name}>"
+
+
+# ======================================================== IF304 checks ====
+
+def _crossing_kind_findings(name: str, report: ifc.IFCReport,
+                            allowed_tags: Sequence[str]) -> List[Finding]:
+    path = _cert_path(name)
+    out: List[Finding] = []
+    for c in report.crossings:
+        if c.kind not in allowed_tags:
+            out.append(Finding(
+                "IF304", path, 0,
+                f"{name}: traced boundary crossing kind {c.kind!r} has no "
+                f"wire serialization (allowed frame tags: "
+                f"{sorted(allowed_tags)})"))
+    return out
+
+
+def _train_if304(name: str, report: ifc.IFCReport, meta: Dict[str, Any],
+                 *, rounds_per_trace: int) -> List[Finding]:
+    """Crossing inventory vs the wire plane for one training method."""
+    path = _cert_path(name)
+    out: List[Finding] = []
+    lanes = 1 + meta["zoo_queries"]
+    embed = _TOY.client_embed
+
+    # (a) every crossing kind must be a codec DATA_TAG — the training
+    # wire only serializes "emb" and "loss" frames
+    out += _crossing_kind_findings(name, report, codec.DATA_TAGS)
+
+    # (b) the ledger formula for one activated client's round
+    msgs = privacy.round_messages(meta["method"], meta["batch"], embed,
+                                  zoo_queries=meta["zoo_queries"])
+    grad_msgs = [m.kind for m in msgs if m.kind in privacy.GRADIENT_KINDS]
+    if grad_msgs:
+        out.append(Finding(
+            "IF304", path, 0,
+            f"{name}: the privacy ledger says this method wires "
+            f"{sorted(set(grad_msgs))} frames — a gradient on the wire "
+            "cannot be certified"))
+        return out
+    n_loss = sum(1 for m in msgs if m.kind == "loss")
+    n_emb = sum(1 for m in msgs if m.kind == "embedding")
+
+    # (c) downlink: total scalars per trace == ledger losses * rounds
+    down = report.down("loss")
+    if not down:
+        out.append(Finding(
+            "IF304", path, 0,
+            f"{name}: the ledger bills {n_loss} loss frames per round but "
+            "the traced step has NO loss downlink crossing — the wire "
+            "accounting and the program disagree"))
+    got = sum(c.size for c in down)
+    want = n_loss * lanes_scalars_per_msg() * rounds_per_trace
+    if down and got != want:
+        out.append(Finding(
+            "IF304", path, 0,
+            f"{name}: traced loss downlink carries {got} scalars per "
+            f"trace; the ledger formula bills {n_loss} loss frames x 1 "
+            f"scalar x {rounds_per_trace} activated client(s) = {want}"))
+    for c in down:
+        if not jnp.issubdtype(jnp.dtype(c.dtype), jnp.floating):
+            out.append(Finding(
+                "IF304", path, 0,
+                f"{name}: loss downlink dtype {c.dtype} is not a float "
+                "loss scalar"))
+
+    # (d) uplink: the lane fan-out axis must match the ledger's 1 clean +
+    # q perturbed embedding frames
+    ups = [c for c in report.up() if c.kind == "emb"]
+    if not ups:
+        out.append(Finding(
+            "IF304", path, 0,
+            f"{name}: the ledger bills {n_emb} embedding frames per round "
+            "but the traced step has NO embedding uplink crossing"))
+    for c in ups:
+        if c.shape[-1] != embed:
+            out.append(Finding(
+                "IF304", path, 0,
+                f"{name}: embedding uplink trailing dim {c.shape[-1]} != "
+                f"client embed width {embed}"))
+        if n_emb > 1 and n_emb not in c.shape[:-2]:
+            out.append(Finding(
+                "IF304", path, 0,
+                f"{name}: embedding uplink shape {list(c.shape)} has no "
+                f"lane axis of size {n_emb} (= 1 clean + q={lanes - 1} "
+                "perturbed frames the ledger bills)"))
+    return out
+
+
+def lanes_scalars_per_msg() -> int:
+    """One ledger loss Message is one scalar (shape ``()`` per lane —
+    ``round_messages`` emits 1+q separate scalar messages)."""
+    return 1
+
+
+def _serve_if304(name: str, report: ifc.IFCReport, *, batch: int,
+                 d_model: int, gen_len: int) -> List[Finding]:
+    path = _cert_path(name)
+    out: List[Finding] = []
+    msgs = privacy.serve_messages(batch, d_model, with_token=True)
+    allowed = sorted({k for k, v in KIND_TO_MESSAGE.items()
+                      if v in {m.kind for m in msgs}})
+    out += _crossing_kind_findings(name, report, allowed)
+
+    toks = report.down("token")
+    if not toks:
+        out.append(Finding(
+            "IF304", path, 0,
+            f"{name}: serve ledger bills a token frame per generation "
+            "step but the decode scan traced NO token downlink"))
+    for c in toks:
+        if not jnp.issubdtype(jnp.dtype(c.dtype), jnp.integer):
+            out.append(Finding(
+                "IF304", path, 0,
+                f"{name}: token downlink dtype {c.dtype} is not an "
+                "integer id — the serve wire must carry token ids, "
+                "never logits"))
+        if c.size != batch:
+            out.append(Finding(
+                "IF304", path, 0,
+                f"{name}: token downlink carries {c.size} elements per "
+                f"step; the ledger bills one id per sequence ({batch})"))
+    ups = [c for c in report.up() if c.kind == "emb"]
+    if not ups:
+        out.append(Finding(
+            "IF304", path, 0,
+            f"{name}: decode scan traced no embedding uplink"))
+    for c in ups:
+        if c.shape[-1] != d_model or c.shape[0] != batch:
+            out.append(Finding(
+                "IF304", path, 0,
+                f"{name}: serve uplink shape {list(c.shape)} does not "
+                f"match the (batch={batch}, 1, d_model={d_model}) "
+                "one-token embedding the ledger bills"))
+    return out
+
+
+# ================================================== per-method drivers ====
+
+def _toy_session(method: str, *, block: int = 1, use_lanes: bool = False,
+                 dp: bool = False, mesh_shards: int = 0,
+                 q: int = _Q) -> Federation:
+    noise = GaussianLossChannel() if dp else None
+    return Federation.build(
+        _TOY, VFLConfig(n_clients=_TOY.n_clients, zoo_queries=q),
+        async_engine.EngineConfig(method=method, batch_size=_BATCH,
+                                  block_size=block, use_lanes=use_lanes,
+                                  mesh_shards=mesh_shards),
+        noise=noise)
+
+
+def _trace_train(fed: Federation) -> Tuple[ifc.IFCReport, Dict[str, Any]]:
+    """Trace the session's step closure; client-bound outputs only."""
+    meta = fed.boundary_meta()
+    args = adapters.example_engine_args(fed.adapter, _TOY, n_rows=_ROWS,
+                                        batch=meta["batch"],
+                                        block=meta["block"])
+    table_shape = tuple(args[1].shape)
+    step = fed.traceable_train_step(table_shape=table_shape)
+
+    def client_view(params: Any, table: Any, m_blk: Any, idx: Any,
+                    key: Any, x_parts: Any, y: Any) -> Any:
+        new_params, _table, _h = step(params, table, m_blk, idx, key,
+                                      x_parts, y)
+        return new_params["clients"]
+
+    report = ifc.trace_and_analyze(client_view, args)
+    return report, meta
+
+
+def _trace_population(fed: Federation) -> Tuple[ifc.IFCReport,
+                                                Dict[str, Any]]:
+    """Trace ``losses_fn`` — the population engine's whole downlink.
+
+    Args are a bare tuple ``(server, c_stale, m, emb_lanes, yb, key)``;
+    the server party owns positions 0 (its parameters) and 1 (the stale
+    embedding table it caches), so the SERVER seed is by position, not
+    by pytree key name."""
+    meta = fed.boundary_meta()
+    _update, losses_fn = fed.traceable_population_fns()
+    q = meta["zoo_queries"]
+    server = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        fed.adapter.param_specs(),
+        is_leaf=lambda x: hasattr(x, "logical"))["server"]
+    c_stale = jnp.zeros((_TOY.n_clients, _BATCH, _TOY.client_embed),
+                        jnp.float32)
+    emb_lanes = jnp.zeros((1 + q, _BATCH, _TOY.client_embed), jnp.float32)
+    yb = jnp.zeros((_BATCH,), jnp.int32)
+    args = (server, c_stale, jnp.int32(0), emb_lanes, yb,
+            jax.random.key(0))
+
+    def is_server(path: str) -> bool:
+        return path.startswith("[0]") or path.startswith("[1]")
+
+    report = ifc.trace_and_analyze(lambda *a: losses_fn(*a), args,
+                                   is_server=is_server)
+    return report, meta
+
+
+def _trace_serve(batch: int, prompt_len: int, gen_len: int
+                 ) -> Tuple[ifc.IFCReport, Dict[str, Any]]:
+    """Trace the decode scan — the serve plane's only server->client
+    channel. Carried server state (logits, KV caches) seeds SERVER; the
+    traced outputs are the sampled tokens the clients receive."""
+    cfg = reduced(get_config("phi3-mini-3.8b"), d_model=32, n_heads=2,
+                  n_kv_heads=1, d_ff=64, vocab_size=64)
+    fed = Federation.build(cfg, VFLConfig(), async_engine.EngineConfig(),
+                           n_clients=2, seq_len=16)
+    adapter = fed.adapter
+    run = serving.make_decode_scan(adapter, fed.n_clients, fed.seq_len,
+                                   prompt_len, gen_len, 0.7,
+                                   cfg.vocab_size)
+    params = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        adapter.param_specs(), is_leaf=lambda x: hasattr(x, "logical"))
+    caches = serving.zero_caches(adapter, batch, prompt_len + gen_len)
+    # the carried logits' aval (shape, padded vocab, dtype) is the serve
+    # step's business — read it off a shape-only trace
+    step = serving.make_serve_step(adapter, fed.n_clients, fed.seq_len)
+    logits_sd, _ = jax.eval_shape(step, params,
+                                  jnp.zeros((batch, 1), jnp.int32),
+                                  caches, 0)
+    logits0 = jnp.zeros(logits_sd.shape, logits_sd.dtype)
+    args = (params, logits0, caches, jax.random.key(0))
+
+    def is_server(path: str) -> bool:
+        # params["server"], the carried logits [1] and KV caches [2]
+        return "server" in path.lower() or path.startswith(("[1]", "[2]"))
+
+    report = ifc.trace_and_analyze(
+        lambda p, lg, c, k: run(p, lg, c, k)[0], args,
+        is_server=is_server)
+    meta = {"method": SPLIT, "plane": "serve", "batch": batch,
+            "d_model": cfg.d_model, "prompt_len": prompt_len,
+            "gen_len": gen_len, "n_clients": fed.n_clients}
+    return report, meta
+
+
+def _report_json(report: ifc.IFCReport) -> Dict[str, Any]:
+    return {
+        "out_taints": [sorted(t) for t in report.out_taints],
+        "crossings": [c.to_json() for c in report.crossings],
+        "n_dp_eqns": report.n_dp_eqns,
+    }
+
+
+def _down_limits(meta: Dict[str, Any]) -> Dict[str, int]:
+    lanes = 1 + meta["zoo_queries"]
+    return {"loss": lanes * meta["block"]}
+
+
+# ============================================================== driver ====
+
+def build_certificate() -> Tuple[List[Finding], Dict[str, Any]]:
+    """Certify every shipped configuration; returns (findings, cert)."""
+    findings: List[Finding] = []
+    methods: Dict[str, Any] = {}
+
+    train_variants = [
+        ("cascaded", dict(method=CASCADED, block=_BLOCK)),
+        ("cascaded-lanes", dict(method=CASCADED, block=_BLOCK,
+                                use_lanes=True)),
+        ("cascaded-dp", dict(method=CASCADED, block=_BLOCK, dp=True)),
+        ("cascaded-sharded", dict(method=CASCADED, block=_BLOCK,
+                                  mesh_shards=1)),
+        ("zoo-vfl", dict(method=ZOO_VFL, block=_BLOCK)),
+        ("syn-zoo", dict(method=SYN_ZOO)),
+    ]
+    for name, kw in train_variants:
+        fed = _toy_session(**kw)
+        report, meta = _trace_train(fed)
+        f = ifc.check_flows(report, name=name, dp_configured=meta["dp"],
+                            down_limits=_down_limits(meta),
+                            path=_cert_path(name))
+        f += _train_if304(name, report, meta,
+                          rounds_per_trace=meta["block"])
+        if meta["dp"] and report.n_dp_eqns < 1:
+            f.append(Finding(
+                "IF303", _cert_path(name), 0,
+                f"{name}: DP channel configured but the traced step "
+                "contains no noise application"))
+        entry: Dict[str, Any] = {
+            "status": "violated" if f else "certified",
+            "meta": meta, "report": _report_json(report),
+            "findings": [fi.rule for fi in f],
+        }
+        if kw.get("mesh_shards"):
+            entry["collectives"] = _sharded_collectives(name, fed, findings)
+        methods[name] = entry
+        findings += f
+
+    # -- population engine (the real-wire server pair) ---------------------
+    for name, dp in (("population", False), ("population-dp", True)):
+        fed = _toy_session(CASCADED, dp=dp)
+        report, meta = _trace_population(fed)
+        limits = {"loss": 1 + meta["zoo_queries"]}   # per-client call
+        f = ifc.check_flows(report, name=name, dp_configured=dp,
+                            down_limits=limits, path=_cert_path(name))
+        f += _train_if304(name, report, meta, rounds_per_trace=1)
+        methods[name] = {
+            "status": "violated" if f else "certified",
+            "meta": dict(meta, plane="wire"),
+            "report": _report_json(report),
+            "findings": [fi.rule for fi in f],
+        }
+        findings += f
+
+    # -- serve plane -------------------------------------------------------
+    name = "split-serve"
+    batch, prompt_len, gen_len = 2, 8, 4
+    report, meta = _trace_serve(batch, prompt_len, gen_len)
+    f = ifc.check_flows(report, name=name, dp_configured=False,
+                        down_limits={"token": batch},
+                        path=_cert_path(name))
+    f += _serve_if304(name, report, batch=batch, d_model=meta["d_model"],
+                      gen_len=gen_len)
+    methods[name] = {
+        "status": "violated" if f else "certified",
+        "meta": meta, "report": _report_json(report),
+        "findings": [fi.rule for fi in f],
+    }
+    findings += f
+
+    # -- negative controls: the leaky FOO wires MUST trip IF301 ------------
+    for name, method in (("vafl", VAFL), ("split", SPLIT)):
+        fed = _toy_session(method)
+        report, meta = _trace_train(fed)
+        f = ifc.check_flows(report, name=name, dp_configured=False,
+                            down_limits=_down_limits(meta),
+                            path=_cert_path(name))
+        tripped = any(fi.rule == "IF301" for fi in f)
+        methods[name] = {
+            "status": "declared-leaky",
+            "expected_failure": "IF301",
+            "tripped": tripped,
+            "meta": meta, "report": _report_json(report),
+            "findings": sorted({fi.rule for fi in f}),
+        }
+        if not tripped:
+            findings.append(Finding(
+                "IF301", _cert_path(name), 0,
+                f"{name}: negative control did NOT trip IF301 — the "
+                "certifier has lost its gradient anchor (grad_mark no "
+                "longer reaches the client outputs), so certifying the "
+                "safe methods proves nothing"))
+
+    cert = {
+        "version": 1,
+        "tool": "repro.analysis.certify",
+        "claim": ("every server->client flow in the shipped methods "
+                  "factors through the (1+q)-scalar loss bottleneck "
+                  "(training) or the sampled-token ids (serving); no "
+                  "server-parameter cotangent reaches a client"),
+        "rules": ["IF301", "IF302", "IF303", "IF304"],
+        "wire": {"codec_data_tags": list(codec.DATA_TAGS),
+                 "wire_version": codec.WIRE_VERSION},
+        "methods": methods,
+        "clean": not findings,
+    }
+    return findings, cert
+
+
+def _sharded_collectives(name: str, fed: Federation,
+                         findings: List[Finding]) -> Dict[str, int]:
+    """Lower + compile the sharded step and audit its collectives."""
+    meta = fed.boundary_meta()
+    args = adapters.example_engine_args(fed.adapter, _TOY, n_rows=_ROWS,
+                                        batch=meta["batch"],
+                                        block=meta["block"])
+    step = fed.traceable_train_step(table_shape=tuple(args[1].shape))
+    txt = jax.jit(step).lower(*args).compile().as_text()
+    coll = hlo.collective_bytes(txt)
+    bad = sorted(set(coll) - SERVER_COLLECTIVES - {"total"})
+    if bad:
+        findings.append(Finding(
+            "IF304", _cert_path(name), 0,
+            f"{name}: sharded step emits collective kinds {bad} beyond "
+            "the server-internal all-gather/all-reduce resharding — a "
+            "new cross-device channel must be re-certified"))
+    return coll
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis certify",
+        description="prove the party boundary on the traced jaxprs")
+    ap.add_argument("--strict", action="store_true",
+                    help="CI mode (identical verdict; documents the gate)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the certificate JSON to stdout")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"certificate path (default {DEFAULT_OUT})")
+    ns = ap.parse_args(argv)
+
+    findings, cert = build_certificate()
+
+    with open(ns.out, "w") as fh:
+        json.dump(cert, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+    if ns.json:
+        print(json.dumps(cert, indent=2, sort_keys=True))
+    else:
+        for f in findings:
+            print(f.render())
+        certified = sum(1 for m in cert["methods"].values()
+                        if m["status"] == "certified")
+        controls = sum(1 for m in cert["methods"].values()
+                       if m["status"] == "declared-leaky"
+                       and m.get("tripped"))
+        print(f"{certified} configuration(s) certified, {controls} "
+              f"negative control(s) tripped as declared, "
+              f"{len(findings)} finding(s) -> {ns.out}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,7 +3,12 @@
 Exit status: 0 when no (unbaselined) findings, 1 otherwise. ``--strict``
 ignores any baseline so only a clean tree passes; without it, findings
 already recorded in ``--baseline`` are tolerated and only *new* ones fail
-the run.
+the run. ``--select FAMILIES`` (e.g. ``--select IF,PB``) restricts the
+report to the named rule families.
+
+``python -m repro.analysis certify [--strict|--json]`` runs the
+jaxpr-level information-flow certifier (IF301–IF304) instead of the AST
+passes — see :mod:`repro.analysis.certify`.
 """
 
 from __future__ import annotations
@@ -14,7 +19,7 @@ import json
 import os
 import sys
 
-from repro.analysis import boundary, jitlint
+from repro.analysis import boundary, jitlint, tags
 from repro.analysis.findings import Finding, apply_suppressions, scan_suppressions
 
 RULES = {
@@ -29,7 +34,16 @@ RULES = {
     "TH204": "leftover debug instrumentation",
     "BA001": "suppression comment without justification",
     "BA002": "unparseable file (syntax error)",
+    "BA003": "suppression comment names an unknown rule id",
+    # jaxpr-level information-flow rules (emitted by `certify`, listed
+    # here so --select and suppressions know the full id space)
+    "IF301": "traced: server-parameter cotangent reaches a client-bound output",
+    "IF302": "traced: server->client flow bypasses the scalar wire bottleneck",
+    "IF303": "traced: DP channel configured but downlink not noise-dominated",
+    "IF304": "traced boundary inventory disagrees with the wire serialization",
 }
+
+KNOWN_RULES = frozenset(RULES)
 
 
 def iter_python_files(paths: list[str]) -> list[str]:
@@ -43,6 +57,28 @@ def iter_python_files(paths: list[str]) -> list[str]:
             for f in sorted(files):
                 if f.endswith(".py"):
                     out.append(os.path.join(root, f))
+    return out
+
+
+def registry_accounting() -> set[str]:
+    """``@tags.accounting`` qualnames from the ``ACCOUNTING_MODULES``
+    registry, parsed straight from the package tree. Seeds the
+    accounting set on PARTIAL scans (``python -m repro.analysis
+    src/repro/wire``): the modules that define ``Transport.account_wire``
+    are outside such a scan, and without the seed every wire declaration
+    naming them would be a spurious PB104."""
+    pkg = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out: set[str] = set()
+    for rel in tags.ACCOUNTING_MODULES:
+        path = os.path.join(pkg, rel)
+        if not os.path.isfile(path):
+            continue
+        with open(path, "r", encoding="utf-8") as fh:
+            try:
+                tree = ast.parse(fh.read(), filename=path)
+            except SyntaxError:
+                continue
+        out |= boundary.collect_accounting({path: tree})
     return out
 
 
@@ -62,12 +98,32 @@ def analyze_paths(paths: list[str]) -> list[Finding]:
             findings.append(
                 Finding("BA002", path, exc.lineno or 1, f"syntax error: {exc.msg}")
             )
-    accounting = boundary.collect_accounting(trees)
+    accounting = boundary.collect_accounting(trees) | registry_accounting()
     for path, tree in trees.items():
         raw = boundary.check_module(path, tree, accounting)
         raw += jitlint.check_module(path, tree)
-        findings += apply_suppressions(raw, scan_suppressions(sources[path]), path)
+        findings += apply_suppressions(
+            raw, scan_suppressions(sources[path]), path, known_rules=KNOWN_RULES
+        )
     return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def select_families(findings: list[Finding], select: str) -> list[Finding]:
+    """Restrict findings to the named rule families (``"IF,PB"``).
+
+    Raises ``SystemExit(2)`` on a family with no known rule — a typo'd
+    ``--select`` must not silently report nothing."""
+    known = {r.rstrip("0123456789") for r in RULES}
+    wanted = [s.strip().upper() for s in select.split(",") if s.strip()]
+    unknown = sorted(set(wanted) - known)
+    if not wanted or unknown:
+        print(
+            f"--select: unknown rule family {unknown or [select]!r}; "
+            f"known families: {sorted(known)}",
+            file=sys.stderr,
+        )
+        raise SystemExit(2)
+    return [f for f in findings if f.rule.rstrip("0123456789") in wanted]
 
 
 def load_baseline(path: str) -> set[str]:
@@ -76,10 +132,25 @@ def load_baseline(path: str) -> set[str]:
 
 
 def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:]) if argv is None else list(argv)
+    if argv and argv[0] == "certify":
+        # the jaxpr-level certifier is a subcommand so the CI gate and
+        # humans share one entry point; imported lazily (it pulls in jax)
+        from repro.analysis import certify
+
+        return certify.main(argv[1:])
+
     parser = argparse.ArgumentParser(
-        prog="python -m repro.analysis", description=__doc__
+        prog="python -m repro.analysis",
+        description=__doc__,
+        epilog="rules: " + ", ".join(sorted(RULES)),
     )
     parser.add_argument("paths", nargs="*", default=["src/repro"])
+    parser.add_argument(
+        "--select",
+        help="comma-separated rule families to report (e.g. IF,PB,TH); "
+        "an unknown family exits 2",
+    )
     parser.add_argument(
         "--strict",
         action="store_true",
@@ -94,6 +165,8 @@ def main(argv: list[str] | None = None) -> int:
     args = parser.parse_args(argv)
 
     findings = analyze_paths(args.paths or ["src/repro"])
+    if args.select:
+        findings = select_families(findings, args.select)
 
     if args.write_baseline:
         with open(args.write_baseline, "w", encoding="utf-8") as fh:

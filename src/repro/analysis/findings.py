@@ -45,14 +45,21 @@ def scan_suppressions(source: str) -> list[Suppression]:
 
 
 def apply_suppressions(
-    findings: list[Finding], suppressions: list[Suppression], path: str
+    findings: list[Finding],
+    suppressions: list[Suppression],
+    path: str,
+    known_rules: frozenset[str] | None = None,
 ) -> list[Finding]:
     """Drop findings covered by a justified inline suppression.
 
     A suppression on line N covers findings on lines N and N+1 (comment
     above the offending statement or trailing on the same line). An
     unjustified suppression (empty reason) is converted into a BA001
-    finding instead of taking effect.
+    finding instead of taking effect. When ``known_rules`` is given, a
+    suppression naming a rule id outside it is a BA003 finding and that
+    id suppresses nothing (a typo like ``ignore[PB110]`` would otherwise
+    silently rot while the finding it meant to cover keeps firing under
+    a different id).
     """
     kept: list[Finding] = []
     for sup in suppressions:
@@ -66,11 +73,25 @@ def apply_suppressions(
                     "`# analysis: ignore[...]` must carry a reason",
                 )
             )
+        if known_rules is not None:
+            for rule in sup.rules:
+                if rule not in known_rules:
+                    kept.append(
+                        Finding(
+                            "BA003",
+                            path,
+                            sup.line,
+                            f"suppression names unknown rule id {rule!r}; "
+                            "it suppresses nothing (known rules: see "
+                            "`python -m repro.analysis --help`)",
+                        )
+                    )
     covered = {
         (line, rule)
         for sup in suppressions
         if sup.reason
         for rule in sup.rules
+        if known_rules is None or rule in known_rules
         for line in (sup.line, sup.line + 1)
     }
     for f in findings:

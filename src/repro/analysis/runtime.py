@@ -30,6 +30,7 @@ import dataclasses
 import logging
 import sys
 import threading
+import typing
 
 import jax
 
@@ -111,7 +112,9 @@ _NP_CONVERTERS = ("asarray", "array", "asanyarray", "ascontiguousarray")
 
 
 @contextlib.contextmanager
-def host_transfer_sentinel(report: SanitizerReport):
+def host_transfer_sentinel(
+    report: SanitizerReport,
+) -> typing.Iterator[SanitizerReport]:
     """Count host-materializing reads of device arrays inside the block."""
     import numpy as np
     from jax._src import array as _jarray
@@ -123,8 +126,8 @@ def host_transfer_sentinel(report: SanitizerReport):
     def _needs_copy(arr: object) -> bool:
         return isinstance(arr, cls) and getattr(arr, "_npy_value", True) is None
 
-    def wrap_method(name: str, orig):
-        def patched(self, *args, **kwargs):
+    def wrap_method(name: str, orig: typing.Any) -> typing.Any:
+        def patched(self: object, *args: object, **kwargs: object) -> object:
             depth = getattr(_state, "depth", 0)
             if depth == 0 and _needs_copy(self):
                 report.record_d2h(_caller_site())
@@ -140,8 +143,8 @@ def host_transfer_sentinel(report: SanitizerReport):
     def wrap_property(orig_prop: property) -> property:
         return property(wrap_method("_value", orig_prop.fget))
 
-    def wrap_np(name: str, orig):
-        def patched(a, *args, **kwargs):
+    def wrap_np(name: str, orig: typing.Any) -> typing.Any:
+        def patched(a: object, *args: object, **kwargs: object) -> object:
             depth = getattr(_state, "depth", 0)
             if depth == 0 and _needs_copy(a):
                 report.record_d2h(_caller_site())
@@ -194,7 +197,9 @@ class _CompileHandler(logging.Handler):
 
 
 @contextlib.contextmanager
-def recompile_sentinel(report: SanitizerReport):
+def recompile_sentinel(
+    report: SanitizerReport,
+) -> typing.Iterator[SanitizerReport]:
     """Count fresh XLA lowerings inside the block via jax_log_compiles."""
     handler = _CompileHandler(report)
     logger = logging.getLogger("jax._src.interpreters.pxla")
@@ -222,7 +227,7 @@ def strict(
     max_compiles: int = 0,
     check: bool = True,
     transfer_guard: str | None = None,
-):
+) -> typing.Iterator[SanitizerReport]:
     """Assert a region performs no host transfers and no fresh compiles.
 
     Yields a :class:`SanitizerReport`; on exit raises

@@ -174,6 +174,21 @@ HOT_MODULES: tuple[str, ...] = (
     "federation/scheduler.py",
     "federation/serving.py",
     "launch/serve.py",
+    # the wire plane's steady-state loops: the worker's serve loop and the
+    # transport backends it drains frames through
+    "wire/worker.py",
+    "wire/backend.py",
+)
+
+# Modules (relative to the ``repro`` package root) that define the
+# ``@tags.accounting`` targets wire declarations may name. The CLI seeds
+# its accounting set from these even on a PARTIAL scan (e.g.
+# ``python -m repro.analysis src/repro/wire``) — otherwise every
+# ``accounted_by="Transport.account_wire"`` in an out-of-scan module would
+# be a spurious PB104.
+ACCOUNTING_MODULES: tuple[str, ...] = (
+    "federation/transport.py",
+    "core/privacy.py",
 )
 
 # Host-sync call forms (device->host) recognized by TH201.

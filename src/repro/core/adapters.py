@@ -23,7 +23,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.analysis import tags
+from repro.analysis import marks, tags
 from repro.configs.base import ModelConfig
 from repro.configs.paper_mlp import PaperMLPConfig
 from repro.core import zoo
@@ -98,7 +98,9 @@ class ModelAdapter:
                       "per round")
     def global_loss(self, params, x_parts, y_batch):
         """Synchronous view: every client fresh, one loss (Split-Learning)."""
-        c = jax.vmap(self.client_forward)(params["clients"], x_parts)
+        c = marks.wire_boundary(
+            jax.vmap(self.client_forward)(params["clients"], x_parts),
+            kind="emb", direction="up")
         return self.server_loss(params["server"], c, y_batch)
 
 
@@ -149,6 +151,33 @@ def tabular_adapter(cfg: Optional[PaperMLPConfig] = None,
         client_lanes=client_lanes,
         table_logical=("clients", None, None),
     )
+
+
+def example_engine_args(adapter: ModelAdapter, cfg: PaperMLPConfig, *,
+                        n_rows: int = 16, batch: int = 4, block: int = 1,
+                        seed: int = 0):
+    """Small concrete engine-step arguments for jaxpr tracing.
+
+    Builds the ``(params, table, m_blk, idx, key, x_parts, y)`` tuple a
+    train-step closure takes (``Federation.traceable_train_step``), sized
+    off the tabular protocol config — the certifier
+    (``repro.analysis.certify``) traces the step over these with
+    ``jax.make_jaxpr``; nothing is executed beyond zero-filled
+    materialization, so no data or hardware is needed. ``params`` keeps
+    its ``{"clients": ..., "server": ...}`` key paths: that is how the
+    certifier labels which inputs are server-held."""
+    specs = adapter.param_specs()
+    params = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)), specs,
+        is_leaf=common.is_spec)
+    M = cfg.n_clients
+    table = jnp.zeros((M, n_rows, cfg.client_embed), jnp.float32)
+    m_blk = jnp.arange(block, dtype=jnp.int32)
+    idx = jnp.zeros((batch,), jnp.int32)
+    key = jax.random.key(seed)
+    x_parts = jnp.zeros((M, n_rows, cfg.features_per_client), jnp.float32)
+    y = jnp.zeros((n_rows,), jnp.int32)
+    return params, table, m_blk, idx, key, x_parts, y
 
 
 # ======================================================== SwiGLU-MLP pair ==

@@ -80,7 +80,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.analysis import tags
+from repro.analysis import marks, tags
 from repro.configs.base import VFLConfig
 from repro.core import zoo
 from repro.core.adapters import ModelAdapter, tabular_adapter
@@ -331,7 +331,9 @@ def _make_client_grad_fns(adapter: ModelAdapter, transport,
             u_stack, d_eff = zoo.sample_directions(
                 key, client_m, vfl.zoo_queries, vfl.zoo_dist, mask)
             phi = zoo.phi_factor(vfl.zoo_dist, d_eff)
-            c_lanes = adapter.client_lanes(client_m, u_stack, vfl.mu, x_m)
+            c_lanes = marks.wire_boundary(
+                adapter.client_lanes(client_m, u_stack, vfl.mu, x_m),
+                kind="emb", direction="up")
             losses = jax.vmap(
                 lambda cf: adapter.server_loss(server, c_stale.at[m].set(cf),
                                                yb))(c_lanes)
@@ -340,14 +342,23 @@ def _make_client_grad_fns(adapter: ModelAdapter, transport,
                                         vfl.mu, phi)
 
         def c_loss(cm):
-            cb = c_stale.at[m].set(adapter.client_forward(cm, x_m))
+            cf = marks.wire_boundary(adapter.client_forward(cm, x_m),
+                                     kind="emb", direction="up")
+            cb = c_stale.at[m].set(cf)
             return adapter.server_loss(server, cb, yb)
 
         if transport.noise is None:
+            # the downlink is identity on a bare wire; routing the stacked
+            # losses through it anyway anchors the (1+q,) bottleneck in
+            # the jaxpr (the unrolled oracle stays unmarked by design)
             g, _, _ = zoo.zoo_gradient(key, c_loss, client_m, vfl.mu,
                                        vfl.zoo_dist, vfl.zoo_queries,
                                        row_mask=mask,
-                                       unrolled=vfl.zoo_unrolled_oracle)
+                                       unrolled=vfl.zoo_unrolled_oracle,
+                                       loss_transform=(
+                                           None if vfl.zoo_unrolled_oracle
+                                           else lambda losses:
+                                           transport.downlink(losses, key)))
             return g
         # noised wire: evaluate the (1+q) lanes explicitly so the noise
         # lands on the transmitted losses, not inside the oracle (same
@@ -373,7 +384,9 @@ def _make_client_grad_fns(adapter: ModelAdapter, transport,
         def c_loss(cm):
             cb = c_stale.at[m].set(adapter.client_forward(cm, x_m))
             return adapter.server_loss(server, cb, yb)
-        return jax.grad(c_loss)(client_m)
+        # grad_mark: these ARE first-order cotangents crossing client-ward;
+        # certifying vafl must fail IF301 (the negative control)
+        return marks.grad_mark(jax.grad(c_loss)(client_m))
 
     return client_zoo_grad, client_foo_grad
 
@@ -388,6 +401,11 @@ def _server_update(adapter: ModelAdapter, method: str, vfl: VFLConfig,
     if method in ("cascaded", "vafl"):
         h, g_server = jax.value_and_grad(adapter.server_loss)(
             server, jax.lax.stop_gradient(c_batch), yb)
+        # the engine's one sanctioned server-FOO point: mark the
+        # cotangents so the certifier (IF301) can prove nothing derived
+        # from them reaches a client-bound output except through the
+        # scalar-loss bottleneck
+        g_server = marks.grad_mark(g_server)
     else:  # zoo-vfl: server trains itself with ZOO too
         def s_loss(s):
             return adapter.server_loss(s, c_batch, yb)
@@ -560,11 +578,22 @@ def _make_sync_step(adapter: ModelAdapter, transport, vfl: VFLConfig):
         if method == "split":
             h, grads = jax.value_and_grad(adapter.global_loss)(params, xb,
                                                                yb)
+            # Split-Learning backprops THROUGH the boundary: its client
+            # grads are cotangents (declared leaky; certifying it must
+            # fail IF301 — the FOO negative control)
+            grads = marks.grad_mark(grads)
         else:  # syn-zoo: every party (server + each client) does ZOO
+            # the shared global draw's (1+q,) losses are what every party
+            # consumes — route them through the downlink so the sync
+            # simulation carries the same jaxpr bottleneck anchor as the
+            # async methods (identity: sync methods reject noise)
             grads, h, _ = zoo.zoo_gradient(
                 key, lambda p: adapter.global_loss(p, xb, yb), params,
                 vfl.mu, vfl.zoo_dist, vfl.zoo_queries,
-                unrolled=vfl.zoo_unrolled_oracle)
+                unrolled=vfl.zoo_unrolled_oracle,
+                loss_transform=(None if vfl.zoo_unrolled_oracle
+                                else lambda losses:
+                                transport.downlink(losses, key)))
         params = jax.tree.map(
             lambda w, g: (w - vfl.lr_server * g).astype(w.dtype), params,
             grads)
@@ -657,6 +686,9 @@ def _population_fns(adapter: ModelAdapter, transport, vfl: VFLConfig):
                               key)
 
     def losses_fn(server, c_stale, m, emb_lanes, yb, key):
+        # the lanes arrived as "emb" wire frames — anchor the uplink
+        emb_lanes = marks.wire_boundary(emb_lanes, kind="emb",
+                                        direction="up")
         losses = jax.vmap(
             lambda cf: adapter.server_loss(server, c_stale.at[m].set(cf),
                                            yb))(emb_lanes)

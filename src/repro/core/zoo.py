@@ -117,12 +117,22 @@ def two_point_grad(u, h_hat, h, mu: float, phi) -> dict:
 
 
 def zoo_gradient(key, loss_fn, tree, mu: float, dist: str = "sphere",
-                 n_queries: int = 1, row_mask=None, unrolled: bool = False):
+                 n_queries: int = 1, row_mask=None, unrolled: bool = False,
+                 loss_transform=None):
     """Full ZOO gradient of ``loss_fn(tree)`` with q-point averaging.
 
     Default path vmaps the loss over the clean lane plus all q perturbation
     lanes in one batched evaluation; ``unrolled=True`` keeps the original
     per-query Python loop as a test oracle (identical draws at fixed key).
+
+    ``loss_transform``, when given, is applied to the stacked ``(1+q,)``
+    loss vector before the estimator consumes it. This is the hook the
+    engine uses to route the losses a ZOO party consumes through
+    ``Transport.downlink`` (identity numerics on a bare wire — it only
+    anchors the party boundary in the jaxpr for the certifier; under a
+    DP channel it is where clip+noise land). Stacked path only: the
+    unrolled per-query loop is the noise-free numerical test oracle and
+    rejects it.
 
     Returns (grad_tree, loss_clean, aux). loss_fn must return a scalar
     (or (scalar, aux))."""
@@ -131,6 +141,10 @@ def zoo_gradient(key, loss_fn, tree, mu: float, dist: str = "sphere",
         return out if isinstance(out, tuple) else (out, None)
 
     if unrolled:
+        if loss_transform is not None:
+            raise ValueError(
+                "loss_transform requires the stacked lane path "
+                "(unrolled=False); the per-query loop is a test oracle")
         loss_clean, aux = eval_loss(tree)
 
         def one_query(k):
@@ -148,6 +162,8 @@ def zoo_gradient(key, loss_fn, tree, mu: float, dist: str = "sphere",
     phi = phi_factor(dist, d_eff)                               # (q,) | scalar
     lanes = stack_lanes(tree, u_stack, mu)
     losses, auxes = jax.vmap(eval_loss)(lanes)                  # (1+q,)
+    if loss_transform is not None:
+        losses = loss_transform(losses)
     loss_clean = losses[0]
     aux = jax.tree.map(lambda a: a[0], auxes)
     grad = grad_from_losses(u_stack, losses[1:], loss_clean, mu, phi)

@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis import tags
+from repro.analysis import marks, tags
 from repro.core.adapters import ModelAdapter
 from repro.core.privacy import Ledger
 
@@ -205,7 +205,8 @@ def make_serve_step(adapter: ModelAdapter, n_clients: int, seq_len: int):
     def step(params, tok, caches, t):
         m = t // span
         client_m = jax.tree.map(lambda a: a[m], params["clients"])
-        e = adapter.client_embed(client_m, tok)
+        e = marks.wire_boundary(adapter.client_embed(client_m, tok),
+                                kind="emb", direction="up")
         logits, caches = adapter.server_decode(params["server"], e, caches,
                                                t)
         return logits, caches
@@ -231,7 +232,8 @@ def make_prefill_chunk(adapter: ModelAdapter, n_clients: int, seq_len: int):
                       "chunk; prefill carries no downlink")
     def chunk(params, toks, caches, t0, m):
         client_m = jax.tree.map(lambda a: a[m], params["clients"])
-        e = adapter.client_embed(client_m, toks)
+        e = marks.wire_boundary(adapter.client_embed(client_m, toks),
+                                kind="emb", direction="up")
         logits, caches = adapter.server_prefill(params["server"], e, caches,
                                                 t0)
         return logits[:, -1:], caches
@@ -261,10 +263,16 @@ def make_decode_scan(adapter: ModelAdapter, n_clients: int, seq_len: int,
                           "token ids come back as scan outputs")
         def body(carry, t):
             logits, caches = carry
-            nxt = sample_token(logits, key, t, temperature, vocab_size)
+            # the serve plane's only downlink: one sampled token id per
+            # step to the owning client (never the logits)
+            nxt = marks.wire_boundary(
+                sample_token(logits, key, t, temperature, vocab_size),
+                kind="token", direction="down")
             m = t // span
             client_m = jax.tree.map(lambda a: a[m], params["clients"])
-            e = adapter.client_embed(client_m, nxt[:, None])
+            e = marks.wire_boundary(adapter.client_embed(client_m,
+                                                         nxt[:, None]),
+                                    kind="emb", direction="up")
             logits, caches = adapter.server_decode(params["server"], e,
                                                    caches, t)
             return (logits, caches), nxt

@@ -21,7 +21,7 @@ from typing import Optional, Tuple
 
 import jax
 
-from repro.analysis import tags
+from repro.analysis import marks, tags
 from repro.core.methods import (SYNC_METHODS, ZOO_WIRE_METHODS,
                                 canonical_method)
 from repro.core.privacy import (GaussianLossChannel, Ledger, Message,
@@ -68,13 +68,24 @@ class Transport:
     def downlink(self, losses: jax.Array, key: jax.Array) -> jax.Array:
         """The scalar-loss downlink hook (server -> client).
 
-        Identity when no noise channel is configured (same jaxpr as a bare
-        wire); otherwise clips + noises every scalar crossing down. Call
-        with the round/row key — the noise stream is derived via a
-        dedicated fold_in salt so direction draws are unchanged."""
+        Identity numerics when no noise channel is configured (the
+        compiled HLO is op-identical to a bare wire); otherwise clips +
+        noises every scalar crossing down. Call with the round/row key —
+        the noise stream is derived via a dedicated fold_in salt so
+        direction draws are unchanged.
+
+        Every return path factors through ``marks.wire_boundary`` (and,
+        under a channel, ``marks.dp_noise``): runtime no-op identity
+        primitives that anchor this — the ONE legal loss downlink — in
+        the traced jaxpr so ``repro.analysis.ifc`` can certify the
+        scalar bottleneck (IF302) and noise-before-wire (IF303) without
+        string-matching on primitives."""
         if self.noise is None:
-            return losses
-        return self.noise.apply(losses, jax.random.fold_in(key, NOISE_SALT))
+            return marks.wire_boundary(losses, kind="loss",
+                                       direction="down")
+        noised = marks.dp_noise(
+            self.noise.apply(losses, jax.random.fold_in(key, NOISE_SALT)))
+        return marks.wire_boundary(noised, kind="loss", direction="down")
 
     # --------------------------------------------------------- accounting --
     @tags.accounting

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import struct
-from typing import Dict, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
@@ -124,7 +124,7 @@ def unframe_length(prefix: bytes) -> int:
 _SEP = "::"
 
 
-def flatten_tree(tree) -> Dict[str, np.ndarray]:
+def flatten_tree(tree: Any) -> Dict[str, np.ndarray]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out: Dict[str, np.ndarray] = {}
     for path, leaf in flat:

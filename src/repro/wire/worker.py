@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,13 +45,14 @@ from repro.wire.codec import WireMessage
 
 
 @functools.lru_cache(maxsize=64)
-def _client_fns(adapter: ModelAdapter, vfl: VFLConfig):
+def _client_fns(adapter: ModelAdapter,
+                vfl: VFLConfig) -> Tuple[Any, Any]:
     """Jitted per-(adapter, vfl) client compute: the uplink fan-out and
     the ZOO update. Cached so every worker of a population shares the
     same compiled executables."""
 
     @tags.party("client")
-    def uplink(client_m, xb, key):
+    def uplink(client_m: Any, xb: Any, key: Any) -> Any:
         """(1+q)-lane embedding fan-out for one round.
 
         Mirrors ``zoo_gradient``'s stacked path exactly (same direction
@@ -68,7 +69,7 @@ def _client_fns(adapter: ModelAdapter, vfl: VFLConfig):
         return u_stack, phi, emb_lanes
 
     @tags.party("client")
-    def _apply(client_m, g):
+    def _apply(client_m: Any, g: Any) -> Any:
         return jax.tree.map(
             lambda w, gg: (w - vfl.lr_client * gg).astype(w.dtype),
             client_m, g)
@@ -76,7 +77,8 @@ def _client_fns(adapter: ModelAdapter, vfl: VFLConfig):
     apply_jit = jax.jit(_apply)
 
     @tags.party("client")
-    def update(client_m, u_stack, phi, losses):
+    def update(client_m: Any, u_stack: Any, phi: Any,
+               losses: Any) -> Any:
         """One ZOO step from the downlinked (1+q) scalar losses.
 
         The jit split here is load-bearing for bitwise parity with
@@ -112,7 +114,7 @@ class ClientWorker:
     (blocking loop for a worker process)."""
 
     def __init__(self, adapter: ModelAdapter, vfl: VFLConfig,
-                 client_params, x_m, index: int,
+                 client_params: Any, x_m: Any, index: int,
                  backend: WireBackend) -> None:
         self.adapter = adapter
         self.vfl = vfl

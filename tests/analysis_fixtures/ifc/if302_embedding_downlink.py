@@ -1,0 +1,27 @@
+"""LEAKY (jaxpr fixture): a (batch, embed) matrix of server-side
+activations pushed through the REAL ``Transport.downlink``. The flow is
+wire-declared and laundered — no IF301 — but the paper's bottleneck is
+(1+q) loss *scalars* per activated client, and the crossing's shape is
+read off the jaxpr: the certifier must report **IF302 and nothing
+else**.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.federation.transport import Transport
+
+EXPECT = "IF302"
+
+
+def build():
+    transport = Transport("cascaded")
+
+    def fn(server_w, x, key):
+        acts = jnp.tanh(x @ server_w)       # (batch, embed) server values
+        # the real downlink channel, misused: a matrix is not a loss lane
+        return transport.downlink(acts, key)
+
+    args = (jnp.zeros((3, 8)), jnp.zeros((4, 3)), jax.random.key(0))
+    return dict(fn=fn, args=args,
+                is_server=lambda p: p.startswith("[0]"),
+                dp_configured=False, down_limits={"loss": 3})

@@ -41,6 +41,7 @@ def _rules_by_file(findings):
 # ------------------------------------------------------- static passes ----
 
 EXPECTED = {
+    "ba003_unknown_rule.py": ["BA003"],
     "federation/scheduler.py": ["TH201"],
     "pb101_undeclared_uplink.py": ["PB101"],
     "pb102_grad_downlink.py": ["PB102", "PB102"],
@@ -57,7 +58,10 @@ EXPECTED = {
 
 def test_every_rule_has_a_failing_fixture(corpus):
     tripped = {f.rule for f in corpus}
-    static_rules = set(cli.RULES) - {"BA002"}  # BA002 needs a broken file
+    # BA002 needs a broken file; IF3xx are jaxpr rules — their leaky
+    # fixtures live in analysis_fixtures/ifc/ and are exercised through
+    # the certifier in test_ifc.py (they are AST-clean by design)
+    static_rules = {r for r in cli.RULES if not r.startswith("IF")} - {"BA002"}
     assert static_rules <= tripped, static_rules - tripped
 
 
@@ -76,6 +80,41 @@ def test_suppression_mechanics(corpus):
     # the justified ignore swallows its PB101; the reasonless one is
     # BA001 and its PB101 survives
     assert {(f.rule, f.line) for f in sup} == {("BA001", 13), ("PB101", 14)}
+
+
+def test_select_family_filter(corpus, capsys):
+    only_pb = cli.select_families(corpus, "PB")
+    assert only_pb and {f.rule[:2] for f in only_pb} == {"PB"}
+    assert cli.select_families(corpus, "pb, th") == cli.select_families(
+        corpus, "PB,TH")
+    with pytest.raises(SystemExit) as exc:
+        cli.select_families(corpus, "ZZ")
+    assert exc.value.code == 2
+    with pytest.raises(SystemExit):
+        cli.select_families(corpus, "")
+    capsys.readouterr()
+
+
+def test_select_flag_end_to_end(capsys):
+    # the fixtures trip PB rules, so selecting only TH on a PB fixture
+    # passes while the unknown family is a usage error (exit 2)
+    pb_only = os.path.join(FIXTURES, "pb101_undeclared_uplink.py")
+    assert cli.main([pb_only, "--strict", "--select", "TH"]) == 0
+    assert cli.main([pb_only, "--strict", "--select", "PB"]) == 1
+    with pytest.raises(SystemExit) as exc:
+        cli.main([pb_only, "--select", "IF,NOPE"])
+    assert exc.value.code == 2
+    capsys.readouterr()
+
+
+def test_partial_scan_resolves_registry_accounting(capsys):
+    """PB104 regression: scanning ONLY the wire plane must still resolve
+    ``accounted_by="Transport.account_wire"`` — the accounting registry
+    (tags.ACCOUNTING_MODULES) seeds the target set on partial scans."""
+    wire_dir = os.path.join(SRC, "wire")
+    assert cli.main([wire_dir, "--strict"]) == 0
+    assert "Transport.account_wire" in cli.registry_accounting()
+    capsys.readouterr()
 
 
 def test_ba002_on_unparseable_file(tmp_path):

@@ -1,0 +1,327 @@
+"""The jaxpr-level information-flow certifier (IF301–IF304).
+
+Four layers, innermost out:
+
+* the identity anchor primitives (``analysis.marks``) are bitwise no-ops
+  that survive vmap/grad/jit — the certifier must not perturb the
+  engine's numerics to observe them;
+* the taint pass (``analysis.ifc``) propagates through the structured
+  higher-order primitives (scan fixpoints, cond control-dependence) and
+  launders exactly at the wire;
+* each seeded leaky fixture (tests/analysis_fixtures/ifc/) trips
+  EXACTLY its rule, and every shipped method configuration certifies
+  clean while the declared-leaky FOO baselines trip IF301;
+* certificate <-> runtime agreement: the frames a REAL population round
+  puts on the wire are exactly the crossings the certificate lists, and
+  the per-round device->host transfer increment is the certificate's
+  downlink count plus the engine's two bookkeeping pulls (IF304 tied to
+  the d2h sentinel).
+"""
+import collections
+import importlib.util
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import certify, ifc, marks, runtime
+from repro.configs import VFLConfig
+from repro.configs.paper_mlp import PaperMLPConfig
+from repro.core import async_engine
+from repro.core.adapters import tabular_adapter
+from repro.core.async_engine import EngineConfig
+from repro.data import make_classification, vertical_partition
+from repro.federation import Transport
+from repro.models import common, tabular
+from repro.wire import FaultPlan
+
+IFC_FIXTURES = os.path.join(os.path.dirname(__file__), "analysis_fixtures",
+                            "ifc")
+SERVER = frozenset({ifc.SERVER})
+CLEAN = frozenset()
+
+
+def _load_fixture(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(IFC_FIXTURES, name + ".py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ======================================================= mark identity ====
+
+def test_marks_are_bitwise_identities():
+    x = jnp.linspace(-2, 2, 12).reshape(3, 4).astype(jnp.bfloat16)
+    for f in (lambda a: marks.wire_boundary(a, kind="emb", direction="up"),
+              marks.dp_noise, marks.grad_mark):
+        np.testing.assert_array_equal(np.asarray(f(x), np.float32),
+                                      np.asarray(x, np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(f)(x), np.float32),
+            np.asarray(x, np.float32))
+
+
+def test_marks_are_transparent_to_grad_and_vmap():
+    def loss(w):
+        return jnp.sum(marks.wire_boundary(w * 3.0, kind="loss",
+                                           direction="down") ** 2)
+
+    w = jnp.arange(4.0)
+    np.testing.assert_array_equal(jax.grad(loss)(w), 18.0 * w)
+    batched = jax.vmap(lambda a: marks.dp_noise(a) + 1)(jnp.ones((5, 2)))
+    np.testing.assert_array_equal(batched, np.full((5, 2), 2.0))
+
+
+def test_marks_compile_to_identical_hlo():
+    """The anchors vanish at lowering: same optimized HLO ops with and
+    without them, so every bitwise-equality guarantee in the suite is
+    preserved by construction."""
+    def plain(x):
+        return jnp.sum(x * 2.0)
+
+    def marked(x):
+        return jnp.sum(marks.grad_mark(
+            marks.wire_boundary(x, kind="emb", direction="up")) * 2.0)
+
+    x = jnp.ones((8,))
+
+    def ops(fn):
+        txt = jax.jit(fn).lower(x).compile().as_text()
+        return [ln.split("=")[1].split("(")[0].strip()
+                for ln in txt.splitlines() if "=" in ln and "ROOT" not in ln]
+
+    assert ops(plain) == ops(marked)
+
+
+def test_wire_boundary_validates_kind_and_direction():
+    x = jnp.ones(3)
+    with pytest.raises(ValueError):
+        marks.wire_boundary(x, kind="logits", direction="down")
+    with pytest.raises(ValueError):
+        marks.wire_boundary(x, kind="emb", direction="sideways")
+
+
+# ========================================================== taint pass ====
+
+def test_taint_flows_through_scan_fixpoint():
+    """A scan that mixes the server seed into its carry on every step:
+    the fixpoint must taint the carry output (and IF302 must fire, since
+    no boundary launders it)."""
+    def fn(server_w, xs):
+        def body(c, x):
+            return c + jnp.sum(server_w) * x, c
+        return jax.lax.scan(body, 0.0, xs)
+
+    rep = ifc.trace_and_analyze(fn, (jnp.ones(3), jnp.ones(4)),
+                                is_server=lambda p: p.startswith("[0]"))
+    assert all(ifc.SERVER in t for t in rep.out_taints)
+    rules = [f.rule for f in ifc.check_flows(
+        rep, name="scan", dp_configured=False, down_limits={"loss": 3})]
+    assert rules == ["IF302"]
+
+
+def test_cond_predicate_is_control_dependence():
+    """Branch outputs inherit the predicate's taint: selecting between
+    two client constants ON a server value leaks one bit."""
+    def fn(server_flag, a):
+        return jax.lax.cond(server_flag > 0, lambda: a + 1.0, lambda: a)
+
+    rep = ifc.trace_and_analyze(fn, (jnp.float32(1.0), jnp.float32(2.0)),
+                                is_server=lambda p: p.startswith("[0]"))
+    assert rep.out_taints == [SERVER]
+
+
+def test_wire_boundary_launders_and_records():
+    def fn(server_w):
+        e = marks.wire_boundary(server_w * 2.0, kind="loss",
+                                direction="down")
+        return e + 1.0
+
+    rep = ifc.trace_and_analyze(fn, (jnp.ones(3),),
+                                is_server=lambda p: True)
+    assert rep.out_taints == [CLEAN]
+    (c,) = rep.crossings
+    assert (c.kind, c.direction, c.shape, c.taint) == (
+        "loss", "down", (3,), SERVER)
+
+
+def test_dp_noise_replaces_taint():
+    def fn(server_w):
+        return marks.wire_boundary(marks.dp_noise(server_w),
+                                   kind="loss", direction="down")
+
+    rep = ifc.trace_and_analyze(fn, (jnp.ones(2),),
+                                is_server=lambda p: True)
+    assert rep.n_dp_eqns == 1
+    assert rep.down("loss")[0].taint == frozenset({ifc.DP})
+    assert not ifc.check_flows(rep, name="dp", dp_configured=True,
+                               down_limits={"loss": 3})
+
+
+# ================================================== the leaky fixtures ====
+
+@pytest.mark.parametrize("name", ["if301_skip_downlink",
+                                  "if302_embedding_downlink",
+                                  "if303_noise_after_estimator"])
+def test_leaky_fixture_trips_exactly_its_rule(name):
+    mod = _load_fixture(name)
+    b = mod.build()
+    rep = ifc.trace_and_analyze(b["fn"], b["args"],
+                                is_server=b["is_server"])
+    findings = ifc.check_flows(rep, name=name,
+                               dp_configured=b["dp_configured"],
+                               down_limits=b["down_limits"])
+    assert [f.rule for f in findings] == [mod.EXPECT]
+
+
+# ======================================================== certificates ====
+
+@pytest.fixture(scope="module")
+def certificate():
+    return certify.build_certificate()
+
+
+def test_all_shipped_methods_certify_clean(certificate):
+    findings, cert = certificate
+    assert findings == []
+    assert cert["clean"]
+    certified = {n for n, m in cert["methods"].items()
+                 if m["status"] == "certified"}
+    assert {"cascaded", "cascaded-lanes", "cascaded-dp", "cascaded-sharded",
+            "zoo-vfl", "syn-zoo", "population", "population-dp",
+            "split-serve"} == certified
+
+
+def test_negative_controls_trip_if301(certificate):
+    _, cert = certificate
+    for name in ("vafl", "split"):
+        entry = cert["methods"][name]
+        assert entry["status"] == "declared-leaky"
+        assert entry["tripped"], f"{name} no longer trips IF301"
+        assert "IF301" in entry["findings"]
+
+
+def test_certified_bottleneck_is_scalar_lanes(certificate):
+    """The paper's §V claim, read off the certificate: every training
+    downlink is (1+q)-scalar lanes, the DP variants are noise-dominated,
+    the serve downlink is integer token ids."""
+    _, cert = certificate
+    for name in ("cascaded", "zoo-vfl", "syn-zoo", "population"):
+        entry = cert["methods"][name]
+        q = entry["meta"]["zoo_queries"]
+        downs = [c for c in entry["report"]["crossings"]
+                 if c["direction"] == "down"]
+        assert downs and all(c["kind"] == "loss" for c in downs)
+        for c in downs:
+            assert c["shape"][-1] == 1 + q
+    for name in ("cascaded-dp", "population-dp"):
+        entry = cert["methods"][name]
+        assert entry["report"]["n_dp_eqns"] >= 1
+        for c in entry["report"]["crossings"]:
+            if c["direction"] == "down":
+                assert c["taint"] == ["dp"]
+    serve = cert["methods"]["split-serve"]["report"]
+    toks = [c for c in serve["crossings"] if c["direction"] == "down"]
+    assert [c["kind"] for c in toks] == ["token"]
+    assert all("int" in c["dtype"] for c in toks)
+
+
+def test_certify_main_writes_certificate(tmp_path, capsys, certificate):
+    out = str(tmp_path / "CERT_boundary.json")
+    assert certify.main(["--strict", "--out", out]) == 0
+    capsys.readouterr()
+    cert = json.load(open(out))
+    assert cert["clean"] and cert["version"] == 1
+    assert sorted(cert["rules"]) == ["IF301", "IF302", "IF303", "IF304"]
+    # --json mode prints the same document
+    assert certify.main(["--json", "--out", out]) == 0
+    printed = json.loads(capsys.readouterr().out)
+    assert printed["methods"].keys() == cert["methods"].keys()
+
+
+def test_if304_catches_wire_disagreement():
+    """Force a disagreement: an inventory whose downlink carries more
+    scalars than the ledger formula bills must be IF304."""
+    rep = ifc.IFCReport(
+        out_taints=[CLEAN],
+        crossings=[ifc.Crossing("loss", "down", (7,), "float32", SERVER),
+                   ifc.Crossing("emb", "up", (3, 4, 4), "float32", CLEAN)],
+        n_dp_eqns=0)
+    meta = {"method": "cascaded", "zoo_queries": 2, "batch": 4}
+    findings = certify._train_if304("forced", rep, meta, rounds_per_trace=1)
+    assert [f.rule for f in findings] == ["IF304"]
+    # and an unserializable payload kind is IF304 regardless of counts
+    rep2 = ifc.IFCReport(
+        out_taints=[CLEAN],
+        crossings=[ifc.Crossing("token", "down", (3,), "int32", SERVER)],
+        n_dp_eqns=0)
+    rules = {f.rule for f in certify._train_if304("forced2", rep2, meta,
+                                                  rounds_per_trace=1)}
+    assert rules == {"IF304"}
+
+
+# ==================================== certificate <-> runtime agreement ====
+
+CFG = PaperMLPConfig(n_features=8, n_classes=3, n_clients=2,
+                     client_embed=4, server_embed=6)
+VFL = VFLConfig(n_clients=2, zoo_queries=2, mu=1e-3)
+
+
+def _run_population(steps):
+    X, y = make_classification(0, 32, CFG.n_features, CFG.n_classes)
+    Xp = jnp.asarray(vertical_partition(X, CFG.n_clients))
+    params = common.materialize(tabular.param_specs(CFG), jax.random.key(0))
+    return async_engine.run_population(
+        tabular_adapter(CFG), Transport("cascaded"), VFL,
+        EngineConfig(method="cascaded", steps=steps, batch_size=4),
+        params, Xp, jnp.asarray(y), fault_plan=FaultPlan.none())
+
+
+def test_certificate_matches_runtime_wire_frames():
+    """IF304 closed loop: one activated client's REAL wire traffic is
+    exactly the certificate's crossing inventory — (1+q) embedding
+    frames of the uplink crossing's per-lane shape up, (1+q) scalar loss
+    frames down, nothing else, no gradient-kind frame anywhere."""
+    fed = certify._toy_session("cascaded")
+    report, meta = certify._trace_population(fed)
+    lanes = 1 + meta["zoo_queries"]
+    steps = 3
+    res = _run_population(steps)
+
+    counts = collections.Counter(m.kind for m in res.ledger.messages)
+    # block_size=1, FaultPlan.none(): every round admits exactly 1 client
+    assert counts == {"embedding": lanes * steps, "loss": lanes * steps}
+    assert not res.ledger.transmits_gradients
+
+    (up,) = [c for c in report.crossings if c.direction == "up"]
+    (down,) = [c for c in report.crossings if c.direction == "down"]
+    assert up.shape == (lanes,) + tuple(
+        m.shape for m in res.ledger.messages if m.kind == "embedding")[0]
+    assert down.shape == (lanes,)
+    for m in res.ledger.messages:
+        if m.kind == "loss":
+            assert m.shape == ()          # one scalar per lane frame
+
+
+def test_certificate_downlinks_match_d2h_increment():
+    """The d2h sentinel against the certificate: on a WARM engine the
+    per-round host pulls are three bookkeeping fetches (the activation
+    key handoff, the loss-history append, the in-proc client worker's
+    loss pull) plus EXACTLY one materialization per certified downlink
+    crossing — so the steady-state d2h increment is 3 + len(downlinks).
+    A second server->client channel would show up here before it showed
+    up anywhere else."""
+    fed = certify._toy_session("cascaded")
+    report, _meta = certify._trace_population(fed)
+    _run_population(2)                    # warm the lru-cached jits
+
+    with runtime.strict(check=False) as r1:
+        _run_population(2)
+    with runtime.strict(check=False) as r2:
+        _run_population(5)
+    per_round = (r2.d2h - r1.d2h) / 3
+    assert per_round == 3 + len(report.down())
