@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
   bench_wire_faults         — population engine over the wire plane:
                               throughput + bytes/round vs drop/latency
                               (emits BENCH_wire.json)
+  bench_serve_chaos         — serve-plane failure policy: goodput vs
+                              preemption, deadline misses, kill-mid-drain
+                              recovery, poison isolation
+                              (emits BENCH_chaos.json)
   bench_roofline            — §Roofline terms from the dry-run artifacts
 
 ``BENCH_*.json`` artifacts keep a dated history entry per run (see
@@ -254,6 +258,13 @@ def bench_wire_faults(fast: bool):
     bench(fast, row=row)
 
 
+# ================================================== serve chaos ============
+
+def bench_serve_chaos(fast: bool):
+    from benchmarks.serve_chaos import bench_serve_chaos as bench
+    bench(fast, row=row)
+
+
 # ======================================================== roofline =========
 
 def bench_roofline(fast: bool):
@@ -290,6 +301,7 @@ BENCHES = {
     "lm_async": bench_lm_async,
     "serve_throughput": bench_serve_throughput,
     "wire_faults": bench_wire_faults,
+    "serve_chaos": bench_serve_chaos,
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,263 @@
+"""Serve-plane chaos harness: what failure policy costs, measured.
+
+Four scenarios over the continuous-batching scheduler, all at toy size:
+
+* ``preemption``   — the same request mix through a roomy pool (no
+  starvation), a starved pool that WAITS, and a starved pool with
+  ``preempt=True``: goodput vs preemption rate, with every result
+  checked bitwise against its solo decode (preemption must cost wire
+  bytes and wall clock, never correctness).
+* ``deadlines``    — a burst behind one slot with per-request step
+  deadlines: deadline-miss rate, goodput of the survivors, and the
+  wasted-compute bill of the misses (queued expiries burn ZERO tokens —
+  infeasibility is detected before admission).
+* ``kill_recovery`` — a drain killed mid-flight (bounded ``run`` +
+  ``snapshot``), persisted via ``fed.save(serve_state=...)``, restored
+  into a FRESH Federation and finished: recovery latency (restore +
+  re-install), tokens lost to the kill (must be 0 — the ledger and token
+  streams resume bitwise), and the snapshot's byte size.
+* ``poison``       — NaN injected into an in-flight request's cache
+  pages: the request terminates ``status="poisoned"``, the engine
+  survives, and the next tenant of the scrubbed pages decodes bitwise.
+
+Emits ``BENCH_chaos.json`` — one dated ``history`` entry per run
+(``benchmarks.history``), the robustness trajectory record the
+``serve-chaos-smoke`` CI job asserts over.
+
+    PYTHONPATH=src python -m benchmarks.serve_chaos [--full] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_OUT = "BENCH_chaos.json"
+
+
+def _toy_session(n_clients: int, seq_len: int):
+    from repro.configs import get_config, reduced
+    from repro.federation import Federation
+    cfg = reduced(get_config("phi3-mini-3.8b"), d_model=64, n_heads=2,
+                  n_kv_heads=1, d_ff=128, vocab_size=256, remat=False)
+    fed = Federation.build(cfg, n_clients=n_clients, seq_len=seq_len)
+    return cfg, fed
+
+
+def _submit_mix(srv, specs, key, vocab, salt):
+    reqs = []
+    for i, (pl, gl) in enumerate(specs):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, salt + i), (pl,), 0, vocab))
+        k = jax.random.fold_in(key, 10 * salt + i)
+        srv.submit(prompt, gl, key=k)
+        reqs.append((prompt, gl, k))
+    return reqs
+
+
+def _solo_ok(fed, params, reqs, results, temperature):
+    """Every "ok" result bitwise-equal to its solo decode?"""
+    for (prompt, gl, k), res in zip(reqs, results):
+        if res.status != "ok":
+            continue
+        solo = fed.decode(params, prompt[None], gen_len=gl,
+                          temperature=temperature, key=k)
+        if not np.array_equal(res.tokens, solo.tokens[0]):
+            return False
+    return True
+
+
+def bench_serve_chaos(fast: bool = True, row=None, out=DEFAULT_OUT):
+    from repro.federation import Federation
+    from repro.models import common
+    from repro.models.model_api import build_model
+
+    seq_len, n_clients = 32, 2
+    cfg, fed = _toy_session(n_clients, seq_len)
+    key = jax.random.key(0)
+    model = build_model(cfg, max_seq=seq_len)
+    gp = common.materialize(model.param_specs, key)
+    params = fed.params_from_global(gp)
+    temperature = 0.8
+
+    # ---------------------------------------------- preemption sweep -----
+    # (4+12 -> 4 pages) + (4+2 -> 2 pages) fills a 6-page pool; the short
+    # request's retirement strands the next long head behind starvation
+    specs = [(4, 12), (4, 2), (4, 12), (4, 12), (2, 9)]
+    total_tokens = sum(gl for _, gl in specs)
+    warm = fed.serve(params, max_batch=2, temperature=temperature)
+    _submit_mix(warm, specs, key, cfg.vocab_size, salt=50)
+    warm.run()                       # absorb compiles outside the timings
+    modes = {}
+    for name, kw in (
+            ("roomy_pool", {}),
+            ("starved_wait", {"page_size": 4, "n_pages": 8}),
+            ("starved_preempt", {"page_size": 4, "n_pages": 8,
+                                 "preempt": True})):
+        srv = fed.serve(params, max_batch=2, temperature=temperature, **kw)
+        reqs = _submit_mix(srv, specs, key, cfg.vocab_size, salt=50)
+        results = srv.run()
+        modes[name] = {
+            "tokens_per_s": round(total_tokens / max(srv.last_run_s, 1e-9),
+                                  1),
+            "decode_steps": srv.steps,
+            "preemptions": srv.preemptions,
+            "preempt_rate": round(srv.preemptions / len(specs), 3),
+            "all_ok": all(r.status == "ok" for r in results),
+            "bitwise_solo": _solo_ok(fed, params, reqs, results,
+                                     temperature),
+            "pages_peak": srv.allocator.peak_in_use,
+        }
+        if row is not None:
+            row(f"chaos_{name}", srv.last_run_s / total_tokens * 1e6,
+                f"preemptions={srv.preemptions};"
+                f"bitwise={modes[name]['bitwise_solo']}")
+    # preempt vs wait on the SAME starved pool: what the re-prefill +
+    # replay of evicted requests costs relative to just queueing
+    preempt_goodput_ratio = round(
+        modes["starved_preempt"]["tokens_per_s"]
+        / max(modes["starved_wait"]["tokens_per_s"], 1e-9), 3)
+
+    # ------------------------------------------------- deadline burst ----
+    srv = fed.serve(params, max_batch=1, temperature=temperature)
+    burst = [(4, 6)] * 6
+    deadlines = [None, None, 15, 15, 15, 60]
+    reqs = []
+    for i, (pl, gl) in enumerate(burst):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 60 + i), (pl,), 0, cfg.vocab_size))
+        k = jax.random.fold_in(key, 600 + i)
+        srv.submit(prompt, gl, key=k, deadline=deadlines[i])
+        reqs.append((prompt, gl, k))
+    results = srv.run()
+    ok = [r for r in results if r.status == "ok"]
+    missed = [r for r in results if r.status == "deadline"]
+    deadline = {
+        "n_requests": len(burst),
+        "missed": len(missed),
+        "miss_rate": round(len(missed) / len(burst), 3),
+        "goodput_tokens": int(sum(r.tokens.size for r in ok)),
+        # queued expiries never reached a slot: zero compute burned
+        "wasted_tokens": int(sum(r.tokens.size for r in missed)),
+        "survivors_bitwise": _solo_ok(fed, params, reqs, results,
+                                      temperature),
+    }
+    assert deadline["missed"] > 0, "deadline scenario never triggered"
+    assert deadline["wasted_tokens"] == 0
+
+    # ----------------------------------------------- kill + recovery -----
+    churn = [(4, 8), (3, 5), (6, 6), (2, 3)]
+
+    def _drain(bounded=None):
+        s = fed.serve(params, max_batch=2, temperature=temperature)
+        _submit_mix(s, churn, key, cfg.vocab_size, salt=70)
+        s.run(max_steps=bounded)
+        return s
+
+    ref = _drain()
+    srv = _drain(bounded=6)                  # "killed" with work in flight
+    ckpt = tempfile.mkdtemp(prefix="serve_chaos_ck_")
+    path = fed.save(ckpt, params, serve_state=srv.snapshot())
+    snap_bytes = sum(
+        os.path.getsize(os.path.join(dp, f))
+        for dp, _, fs in os.walk(os.path.join(path, "serve_plane"))
+        for f in fs)
+    tic = time.perf_counter()
+    fed2, params2, state = Federation.restore(path)
+    srv2 = fed2.serve(params2, state=state.serve_state)
+    recovery_latency_s = time.perf_counter() - tic     # restore + install
+    srv2.run()
+    ref_total = sum(r.tokens.size for r in ref.results.values())
+    res_total = sum(r.tokens.size for r in srv2.results.values())
+    resume_bitwise = (
+        set(srv2.results) == set(ref.results)
+        and all(np.array_equal(srv2.results[rid].tokens, r.tokens)
+                and srv2.results[rid].status == r.status
+                for rid, r in ref.results.items()))
+    ledger_bitwise = all(
+        srv2.results[rid].ledger.messages == r.ledger.messages
+        for rid, r in ref.results.items())
+    kill_recovery = {
+        "killed_at_step": 6,
+        "snapshot_bytes": snap_bytes,
+        "recovery_latency_s": round(recovery_latency_s, 4),
+        "tokens_lost_on_kill": int(ref_total - res_total),
+        "resume_bitwise": bool(resume_bitwise),
+        "ledger_bitwise": bool(ledger_bitwise),
+    }
+    assert kill_recovery["tokens_lost_on_kill"] == 0
+    if row is not None:
+        row("chaos_kill_recovery", recovery_latency_s * 1e6,
+            f"tokens_lost={kill_recovery['tokens_lost_on_kill']};"
+            f"bitwise={resume_bitwise}")
+
+    # ------------------------------------------------ poison isolation ---
+    srv = fed.serve(params, max_batch=2, temperature=temperature)
+    prompt = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 80), (4,), 0, cfg.vocab_size))
+    srv.submit(prompt, 8, key=jax.random.fold_in(key, 800))
+    srv.run(max_steps=2)
+    pg = int(srv._slot_pages[0][0])
+    srv._caches_st = jax.tree.map(
+        lambda st, plan: (st.at[:, pg].set(jnp.nan) if plan.pooled
+                          else st),
+        srv._caches_st, srv._plans)
+    (poisoned_res,) = srv.run()
+    k_b = jax.random.fold_in(key, 801)
+    prompt_b = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 81), (4,), 0, cfg.vocab_size))
+    srv.submit(prompt_b, 6, key=k_b)
+    (clean_res,) = srv.run()
+    solo_b = fed.decode(params, prompt_b[None], gen_len=6,
+                        temperature=temperature, key=k_b)
+    poison = {
+        "status": poisoned_res.status,
+        "engine_survived": clean_res.status == "ok",
+        "next_request_bitwise": bool(
+            np.array_equal(clean_res.tokens, solo_b.tokens[0])),
+        "pages_leaked": srv.allocator.in_use,
+    }
+    assert poison["status"] == "poisoned"
+    assert poison["pages_leaked"] == 0
+
+    results = {
+        "config": {"arch": cfg.arch_id, "d_model": cfg.d_model,
+                   "vocab": cfg.vocab_size, "n_clients": n_clients,
+                   "seq_len": seq_len, "temperature": temperature},
+        "preemption": {
+            "request_mix": specs,
+            "modes": modes,
+            "preempt_goodput_vs_wait": preempt_goodput_ratio,
+        },
+        "deadlines": deadline,
+        "kill_recovery": kill_recovery,
+        "poison": poison,
+    }
+    from benchmarks.history import append_history
+    append_history(out, results)
+    if row is not None:
+        row("chaos_summary", 0.0,
+            f"preempt_rate={modes['starved_preempt']['preempt_rate']};"
+            f"miss_rate={deadline['miss_rate']};"
+            f"tokens_lost={kill_recovery['tokens_lost_on_kill']}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", dest="fast", action="store_false",
+                    default=True)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    res = bench_serve_chaos(args.fast, row=None, out=args.out)
+    print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

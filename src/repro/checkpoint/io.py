@@ -2,12 +2,20 @@
 
 Arrays are gathered to host (fully-addressable) on save; on restore each
 leaf is device_put with the requested sharding (or left on default device).
+
+Writes are ATOMIC per file: every npz/manifest is written to a temp file
+in the target directory, fsync'd, then ``os.replace``'d into place — a
+process killed mid-``save_checkpoint`` (or mid-``fed.save``) leaves
+either the previous complete checkpoint or the new complete one on disk,
+never a torn npz or a half-written ``session.json``. The manifest is
+replaced LAST, so its presence always certifies arrays it can decode.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Optional
+import tempfile
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -61,12 +69,38 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def atomic_write(path: str, write_fn: Callable[[Any], None],
+                 mode: str = "wb") -> None:
+    """Write ``path`` atomically: ``write_fn(file)`` runs against a temp
+    file in the same directory, which is fsync'd and ``os.replace``'d
+    over ``path`` only after the write completed. A crash at any point
+    leaves the previous ``path`` (or nothing) — never a torn file."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, mode) as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def save_checkpoint(path: str, params, *, step: int = 0,
                     metadata: Optional[dict] = None) -> None:
     os.makedirs(path, exist_ok=True)
     flat = _flatten(params)
-    np.savez(os.path.join(path, "arrays.npz"),
-             **{k: _encode(v) for k, v in flat.items()})
+    # arrays first, manifest last: a manifest on disk always describes a
+    # complete arrays file (each file individually atomic)
+    atomic_write(os.path.join(path, "arrays.npz"),
+                 lambda f: np.savez(f, **{k: _encode(v)
+                                          for k, v in flat.items()}))
     manifest = {
         "step": step,
         "keys": sorted(flat),
@@ -74,8 +108,8 @@ def save_checkpoint(path: str, params, *, step: int = 0,
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
         "metadata": metadata or {},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
+    atomic_write(os.path.join(path, "manifest.json"),
+                 lambda f: json.dump(manifest, f, indent=2), mode="w")
 
 
 def load_tree(path: str):

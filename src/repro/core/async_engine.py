@@ -700,7 +700,8 @@ def _population_fns(adapter: ModelAdapter, transport, vfl: VFLConfig):
 def _fresh_counters() -> dict:
     return {"rounds": 0, "activations": 0, "admitted": 0,
             "uplink_drops": 0, "stragglers": 0, "downlink_drops": 0,
-            "forced": 0, "degraded_rounds": 0, "retransmit_frames": 0}
+            "forced": 0, "degraded_rounds": 0, "retransmit_frames": 0,
+            "dead_parties": 0}
 
 
 def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
@@ -711,7 +712,9 @@ def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
                    state: Optional[AsyncPlaneState] = None,
                    ledger: Optional[Ledger] = None, dp_releases: int = 0,
                    until: Optional[int] = None,
-                   stop_workers: bool = True) -> PopulationResult:
+                   stop_workers: bool = True,
+                   wire_timeout_s: Optional[float] = None
+                   ) -> PopulationResult:
     """The asynchronous protocol over a REAL wire with fault injection.
 
     Every registered client (M = ``x_parts.shape[0]``) sits behind a
@@ -737,9 +740,25 @@ def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
 
     With ``FaultPlan.none()`` and no population knobs the result is
     bitwise-identical to :func:`run` (losses, params, table, delays).
+
+    CRASH SEMANTICS for remote (``channels``-placed) parties: a party
+    whose wire dies mid-round — the process was ``kill -9``'d, the frame
+    stream corrupted, or ``wire_timeout_s`` elapsed without a frame — is
+    DECLARED DEAD after the backend's own retry budget (a
+    ``SocketBackend`` connected with ``self_heal=True`` reconnects with
+    backoff underneath first). A dead party then degrades gracefully
+    exactly like a permanent dropout: it misses every later activation
+    (its stale embeddings keep serving), the round never hangs, and at
+    collect time its parameter row falls back to the initial params the
+    engine holds. ``counters["dead_parties"]`` reports the toll; a
+    replacement process can rejoin a LATER run via
+    ``ClientWorker.from_checkpoint``. Loopback parties never take this
+    path — their failures are real bugs and stay fail-fast.
     """
     from repro.wire import codec
-    from repro.wire.backend import LoopbackBackend
+    from repro.wire.backend import (LoopbackBackend, WireClosed,
+                                    WireTimeout)
+    from repro.wire.codec import FrameCorruption
     from repro.wire.faults import FaultPlan
     from repro.wire.worker import ClientWorker
 
@@ -804,6 +823,8 @@ def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
 
     # ---- wire up the population: loopback workers for unplaced parties --
     channels = dict(channels or {})
+    remote = frozenset(channels)    # parties that can actually die
+    dead: set = set()
     local_workers: dict = {}
     for m in range(M):
         if m not in channels:
@@ -814,6 +835,15 @@ def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
                 x_parts[m], m, wk_end)
             channels[m] = eng_end
 
+    # failures a dying REMOTE party can surface through its channel;
+    # anything else (protocol bugs, engine errors) stays fail-fast
+    _WIRE_DEATH = (WireClosed, WireTimeout, FrameCorruption,
+                   ConnectionError, OSError)
+
+    def _mark_dead(m):
+        dead.add(m)
+        counters["dead_parties"] += 1
+
     def _pump(m):
         if m in local_workers:
             local_workers[m].pump()
@@ -822,6 +852,11 @@ def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
         nonlocal control_bytes
         control_bytes += channels[m].send(msg)
         _pump(m)
+
+    def _recv(m):
+        if m in remote and wire_timeout_s is not None:
+            return channels[m].recv(timeout=wire_timeout_s)
+        return channels[m].recv()
 
     server_update, losses_fn = _population_fns(adapter, transport, vfl)
     losses_out = []
@@ -854,20 +889,35 @@ def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
         round_ms = 0.0
         for r, m in enumerate(m_blk):
             counters["activations"] += 1
+            if m in dead:
+                # declared dropout: the party misses the round outright —
+                # no frames, no metering, stale embeddings keep serving
+                counters["uplink_drops"] += 1
+                continue
             kd = np.asarray(jax.random.key_data(keys_r[r]))
-            _send_control(m, codec.WireMessage(
-                "act", "server", t, {"party": m}, {"idx": idx, "key": kd}))
             lanes = []
-            for _ in range(1 + q):
-                msg, nb = channels[m].recv()
-                if msg.tag != "emb":  # pragma: no cover - protocol error
-                    raise ValueError(f"expected emb frame, got {msg.tag!r}")
-                arr = msg.payload["c"]
-                lanes.append(arr)
-                up = plan.delivery(t, m, "up")
-                emb_meter[r].append((Message(
-                    "client", "embedding", tuple(arr.shape),
-                    str(arr.dtype), wired=nb), up.attempts))
+            try:
+                _send_control(m, codec.WireMessage(
+                    "act", "server", t, {"party": m},
+                    {"idx": idx, "key": kd}))
+                for _ in range(1 + q):
+                    msg, nb = _recv(m)
+                    if msg.tag != "emb":  # pragma: no cover - protocol
+                        raise ValueError(
+                            f"expected emb frame, got {msg.tag!r}")
+                    arr = msg.payload["c"]
+                    lanes.append(arr)
+                    up = plan.delivery(t, m, "up")
+                    emb_meter[r].append((Message(
+                        "client", "embedding", tuple(arr.shape),
+                        str(arr.dtype), wired=nb), up.attempts))
+            except _WIRE_DEATH:
+                if m not in remote:
+                    raise       # loopback failures are bugs, not churn
+                _mark_dead(m)
+                counters["uplink_drops"] += 1
+                emb_meter[r] = []   # nothing usable arrived — meter none
+                continue
             counters["retransmit_frames"] += (up.attempts - 1) * (1 + q)
             client_ms = up.elapsed_ms
             if not up.ok:
@@ -904,14 +954,24 @@ def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
                                keys_r[r])
             down = plan.delivery(t, m, "down")
             losses_h = np.asarray(losses)
-            for lane in range(1 + q):
-                nb = channels[m].send(codec.WireMessage(
-                    "loss", "server", t,
-                    {"lane": lane, "delivered": bool(down.ok)},
-                    {"h": losses_h[lane]}))
-                loss_meter[r].append((Message(
-                    "server", "loss", (), str(losses_h.dtype), wired=nb),
-                    down.attempts))
+            try:
+                for lane in range(1 + q):
+                    nb = channels[m].send(codec.WireMessage(
+                        "loss", "server", t,
+                        {"lane": lane, "delivered": bool(down.ok)},
+                        {"h": losses_h[lane]}))
+                    loss_meter[r].append((Message(
+                        "server", "loss", (), str(losses_h.dtype),
+                        wired=nb), down.attempts))
+            except _WIRE_DEATH:
+                # died between uplink and downlink: the server already
+                # consumed its fresh embeddings (that's fine — they were
+                # real), the client just never gets this round's losses
+                if m not in remote:
+                    raise
+                _mark_dead(m)
+                counters["downlink_drops"] += 1
+                continue
             _pump(m)
             counters["retransmit_frames"] += (down.attempts - 1) * (1 + q)
             if noise_on:
@@ -943,17 +1003,36 @@ def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
     # ---- collect the population's parameters back over the wire --------
     rows = []
     for m in range(M):
-        _send_control(m, codec.WireMessage("collect", "server", stop_at))
-        msg, nb = channels[m].recv()
-        if msg.tag != "params":  # pragma: no cover - protocol error
-            raise ValueError(f"expected params frame, got {msg.tag!r}")
-        control_bytes += nb
-        rows.append(jax.tree.map(jnp.asarray,
-                                 codec.unflatten_tree(msg.payload)))
+        fallback = jax.tree.map(lambda a: a[m], params["clients"])
+        if m in dead:
+            rows.append(fallback)   # best knowledge: the initial row
+            continue
+        try:
+            _send_control(m, codec.WireMessage("collect", "server",
+                                               stop_at))
+            msg, nb = _recv(m)
+            if msg.tag != "params":  # pragma: no cover - protocol error
+                raise ValueError(f"expected params frame, got {msg.tag!r}")
+            control_bytes += nb
+            rows.append(jax.tree.map(jnp.asarray,
+                                     codec.unflatten_tree(msg.payload)))
+        except _WIRE_DEATH:
+            if m not in remote:
+                raise
+            _mark_dead(m)
+            rows.append(fallback)
     clients = jax.tree.map(lambda *rs: jnp.stack(rs), *rows)
     if stop_workers:
         for m in range(M):
-            _send_control(m, codec.WireMessage("stop", "server", stop_at))
+            if m in dead:
+                continue
+            try:
+                _send_control(m, codec.WireMessage("stop", "server",
+                                                   stop_at))
+            except _WIRE_DEATH:
+                if m not in remote:
+                    raise
+                _mark_dead(m)
 
     counters["control_bytes"] = control_bytes
     out_state = AsyncPlaneState(
@@ -974,7 +1053,8 @@ def run_population(adapter: ModelAdapter, transport, vfl: VFLConfig,
         **{k: counters[k] for k in ("uplink_drops", "stragglers",
                                     "downlink_drops", "forced",
                                     "degraded_rounds",
-                                    "retransmit_frames")},
+                                    "retransmit_frames",
+                                    "dead_parties")},
     }
     return PopulationResult(
         params={"clients": clients, "server": server},

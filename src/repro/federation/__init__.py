@@ -45,12 +45,12 @@ over a session, bitwise-identical at noise=0.
 """
 from repro.core.privacy import GaussianLossChannel
 from repro.federation.parties import ClientParty, Parties, ServerParty
-from repro.federation.scheduler import (RequestResult, ServeRequest,
-                                        ServeScheduler)
+from repro.federation.scheduler import (QueueFull, RequestResult,
+                                        ServeRequest, ServeScheduler)
 from repro.federation.serving import ServeResult
 from repro.federation.session import Federation, SessionState
 from repro.federation.transport import Transport
 
 __all__ = ["ClientParty", "Federation", "GaussianLossChannel", "Parties",
-           "RequestResult", "ServeRequest", "ServeResult", "ServeScheduler",
-           "ServerParty", "SessionState", "Transport"]
+           "QueueFull", "RequestResult", "ServeRequest", "ServeResult",
+           "ServeScheduler", "ServerParty", "SessionState", "Transport"]

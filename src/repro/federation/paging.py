@@ -175,3 +175,19 @@ class PageAllocator:
                 raise ValueError(f"freeing invalid page id {i}")
         self._free.extend(ids)
         self.in_use -= len(ids)
+
+    # ------------------------------------------------ durability hooks ----
+    def snapshot(self) -> dict:
+        """JSON-able state: free-list ORDER included, so a restored
+        allocator hands out the same page ids in the same order — the
+        resumed serve plane's allocations replay exactly."""
+        return {"n_pages": self.n_pages, "free": [int(i) for i in self._free],
+                "in_use": self.in_use, "peak_in_use": self.peak_in_use}
+
+    @classmethod
+    def restore(cls, snap: dict) -> "PageAllocator":
+        alloc = cls(int(snap["n_pages"]))
+        alloc._free = deque(int(i) for i in snap["free"])
+        alloc.in_use = int(snap["in_use"])
+        alloc.peak_in_use = int(snap["peak_in_use"])
+        return alloc

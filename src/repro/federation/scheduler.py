@@ -42,22 +42,70 @@ ledger call per token, and a blocking device→host fetch inside
 
 Sampling uses the same ``fold_in(request_key, 100 + t)`` stream as the
 solo path, so a request's tokens do not depend on what shared the batch.
+
+**Failure policy** (the robustness layer):
+
+* **bounded queue** — ``max_queue`` turns unbounded FIFO growth into
+  typed backpressure: ``submit`` past the bound raises
+  :class:`QueueFull` instead of silently deepening the backlog.
+* **deadlines** — ``submit(deadline=D)`` gives the request D scheduler
+  steps to RETIRE. An admitted request always meets its deadline (every
+  block steps every occupied slot), so misses happen in the queue: the
+  admission loop expires any queued request that can no longer finish in
+  time (``status="deadline"``, partial tokens, ledger metering exactly
+  what ran).
+* **cancellation** — :meth:`cancel` removes a queued request or evicts
+  an in-flight one between blocks (``status="cancelled"``); its ledger
+  meters exactly the steps it ran — admission's prompt uploads plus one
+  generation entry per token actually produced, byte-identical to a solo
+  decode truncated at the same length.
+* **preemption** — when the queue's head cannot get pages while a slot
+  is free, the scheduler may evict a victim (fewest tokens remaining
+  wins; only slots that progressed since admission are eligible, which
+  makes the policy livelock-free) and re-queue it. On re-admission the
+  victim re-prefills its prompt, REPLAYS its already-generated tokens
+  through the per-token serve step, and resumes at the same absolute
+  position ``t`` — the sampling stream is ``fold_in(key, 100 + t)``, so
+  the resumed tokens are BITWISE what the unpreempted run would have
+  produced (pinned by tests next to the continuous==solo guarantee).
+  Preemption overhead is metered honestly: the evicted tenancy's
+  generation entries at eviction, the full re-prefill (prompt +
+  generated-so-far uploads) at re-admission.
+* **poison isolation** — a request whose logits go non-finite fails with
+  ``status="poisoned"`` at its next host-fetch point (retirement or
+  eviction), never the engine: its pages are scrubbed to zero before
+  reuse, because NaN — unlike the usual stale bytes — survives the
+  causal mask (``0·NaN = NaN``) and would leak into the page's next
+  tenant.
+* **durability** — :meth:`snapshot` captures the whole serve plane
+  (queue, slot tables, page-pool free list order, gen buffers,
+  per-request ledgers, RNG key streams) as a :class:`SchedulerState`
+  that saves through ``fed.save(serve_state=...)``; a scheduler restored
+  mid-drain (``run(max_steps=...)`` then kill) continues bitwise — same
+  token streams, byte-identical per-request ledgers — mirroring the
+  async training plane's ``AsyncPlaneState`` contract.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import tags
+from repro.checkpoint.io import load_tree, save_checkpoint
 from repro.core.adapters import ModelAdapter
-from repro.core.privacy import Ledger
+from repro.core.privacy import Ledger, Message
 from repro.federation import paging, serving
+
+
+class QueueFull(RuntimeError):
+    """Typed backpressure: the admission queue is at ``max_queue`` — shed
+    load upstream instead of queueing unboundedly."""
 
 
 @dataclasses.dataclass
@@ -68,17 +116,29 @@ class ServeRequest:
     gen_len: int
     key: jax.Array                  # typed PRNG key — solo-compatible stream
     ledger: Ledger = dataclasses.field(default_factory=Ledger)
+    deadline: Optional[int] = None  # absolute scheduler step to retire by
+    # tokens generated before a preemption (replayed at re-admission)
+    generated: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    preemptions: int = 0
+    first_admitted: int = -1        # -1 = never admitted
 
 
 @dataclasses.dataclass
 class RequestResult:
-    """One drained request: its tokens and its exact wire ledger."""
+    """One drained request: its tokens and its exact wire ledger.
+
+    ``status`` is ``"ok"`` for a full retirement; ``"cancelled"`` /
+    ``"deadline"`` / ``"poisoned"`` results carry the tokens generated up
+    to the failure and a ledger metering exactly the steps that ran."""
     rid: int
     tokens: np.ndarray              # (gen_len,) sampled token ids
     ledger: Ledger
     prompt_len: int
     admitted_at: int                # scheduler step index at admission
     finished_at: int                # scheduler step index at retirement
+    status: str = "ok"
+    preemptions: int = 0
 
     @property
     def wire_bytes(self) -> int:
@@ -87,6 +147,53 @@ class RequestResult:
     @property
     def transmits_gradients(self) -> bool:
         return self.ledger.transmits_gradients
+
+
+# -------------------------------------------------- ledger (de)serialize --
+# SchedulerState needs per-request ledgers BYTE-identical across a
+# save/restore, including message ORDER — Ledger.to_counts aggregates
+# (fine for totals, lossy for interleavings), so the serve plane keeps
+# its own exact row codec.
+
+def _ledger_rows(led: Ledger) -> List[list]:
+    return [[m.sender, m.kind, list(m.shape), m.dtype, m.wired]
+            for m in led.messages]
+
+
+def _ledger_from_rows(rows: List[list]) -> Ledger:
+    led = Ledger()
+    led.messages.extend(
+        Message(sender, kind, tuple(shape), dtype,
+                wired=None if wired is None else int(wired))
+        for sender, kind, shape, dtype, wired in rows)
+    return led
+
+
+@dataclasses.dataclass
+class SchedulerState:
+    """A complete serve-plane snapshot: every device buffer (page pool,
+    slot state, gen buffers, RNG key data), the host bookkeeping (queue,
+    slot tables, allocator free-list ORDER, per-request ledgers, result
+    set, counters) and the constructor config. ``fed.save(serve_state=)``
+    persists it; ``fed.serve(params, state=...)`` resumes it bitwise."""
+    flat: Dict[str, np.ndarray]     # array leaves, keystr-addressed
+    meta: dict                      # JSON-able bookkeeping + config
+
+    def save(self, path: str) -> str:
+        save_checkpoint(path, self.flat, metadata=self.meta)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "SchedulerState":
+        tree, _, meta = load_tree(path)
+        return cls(flat={k: np.asarray(v) for k, v in tree.items()},
+                   meta=meta)
+
+
+def _leafkey(group: str, path: Any) -> str:
+    # "x" prefix keeps load_tree's dict-only key grammar happy (keystr
+    # output starts with "[")
+    return f"x['{group}']" + jax.tree_util.keystr(path)
 
 
 @functools.lru_cache(maxsize=64)
@@ -172,14 +279,18 @@ def make_install_prog(adapter: ModelAdapter, seq_len: int):
     """The slot-install scatter: move a wave of freshly prefilled
     requests from the dense prefill buffer into their allocated pages
     (pooled leaves) / their slot rows (state leaves), and set the wave's
-    logits, clocks, remaining counters and key streams in one compiled
-    call. One program per (prompt_len, wave_width) shape pair; shared
-    across scheduler instances (lru on the frozen adapter)."""
+    logits, clocks, remaining counters, gen buffers and key streams in
+    one compiled call. One program per (prompt_len, wave_width) shape
+    pair; shared across scheduler instances (lru on the frozen adapter).
+
+    ``gen_rows``/``gen_pos0s`` seed the generation buffer — zeros for a
+    fresh request, the already-generated prefix (with its length as the
+    write cursor) for a preempted request being resumed."""
     plans = paging.leaf_plans(adapter.cache_specs(1, seq_len))
 
     def install(caches_st, logits_st, t_st, gen_pos_st, rem_st,
-                keydata_st, dense_caches, logits, rows, slots, t0s,
-                rem0s, keydata_w):
+                keydata_st, gen_buf_st, dense_caches, logits, rows, slots,
+                t0s, rem0s, keydata_w, gen_rows, gen_pos0s):
         def one(st, dense, plan):
             if plan.pooled:
                 # pooled leaves are (layers, B, S, *tail) densely: scatter
@@ -196,11 +307,12 @@ def make_install_prog(adapter: ModelAdapter, seq_len: int):
         caches_st = jax.tree.map(one, caches_st, dense_caches, plans)
         return (caches_st, logits_st.at[slots].set(logits[:, None]),
                 t_st.at[slots].set(t0s),
-                gen_pos_st.at[slots].set(jnp.zeros_like(t0s)),
+                gen_pos_st.at[slots].set(gen_pos0s),
                 rem_st.at[slots].set(rem0s),
-                keydata_st.at[slots].set(keydata_w))
+                keydata_st.at[slots].set(keydata_w),
+                gen_buf_st.at[slots].set(gen_rows))
 
-    return jax.jit(install, donate_argnums=(0, 1, 2, 3, 4, 5))
+    return jax.jit(install, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
 
 class ServeScheduler:
@@ -215,7 +327,11 @@ class ServeScheduler:
     ``max_batch`` full-length sequences + the two reserved pages). A
     smaller pool admission-gates requests on free pages instead of free
     slots — peak cache memory then tracks the lengths actually in
-    flight, not ``max_batch × seq_len``.
+    flight, not ``max_batch × seq_len``. With ``preempt=True`` a
+    page-starved queue head may instead evict the in-flight request with
+    the fewest tokens remaining (bitwise-exact resume; see the module
+    docstring). ``max_queue`` bounds the admission queue (``submit``
+    raises :class:`QueueFull` past it).
     """
 
     def __init__(self, adapter: ModelAdapter, transport, *, params,
@@ -223,7 +339,9 @@ class ServeScheduler:
                  vocab_size: int, max_batch: int = 4,
                  temperature: float = 0.0,
                  page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 preempt: bool = False):
         serving._require_serve_plane(adapter)
         if adapter.server_decode_paged is None:
             raise ValueError(
@@ -231,6 +349,8 @@ class ServeScheduler:
                 "hook; build the session from a ModelConfig to serve")
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.adapter = adapter
         self.transport = transport
         self.params = params
@@ -241,6 +361,8 @@ class ServeScheduler:
         self.vocab_size = vocab_size
         self.max_batch = max_batch
         self.temperature = float(temperature)
+        self.max_queue = max_queue
+        self.preempt = bool(preempt)
 
         self.page_size = (paging.default_page_size(seq_len)
                           if page_size is None else int(page_size))
@@ -289,21 +411,30 @@ class ServeScheduler:
         # steady-state path never rebuilds an AOT cache key per block
         self._block_progs: Dict[int, object] = {}
 
-        # perf counters (the throughput bench reads these)
+        # perf + failure counters (the throughput/chaos benches read these)
         self.steps = 0
         self.compile_s = 0.0
         self.generated_tokens = 0
         self.last_run_s = 0.0
         self.host_transfers = 0     # device->host fetches (one per wave)
+        self.preemptions = 0
+        self.deadline_misses = 0
+        self.poisoned = 0
 
     # ------------------------------------------------------- queueing ----
     def submit(self, prompt, gen_len: int, *, seed: Optional[int] = None,
-               key=None) -> int:
+               key=None, deadline: Optional[int] = None) -> int:
         """Queue one request; returns its rid. ``key`` (or ``seed``) is
         the request's sampling stream — the SAME key given to a solo
         ``fed.decode`` yields the same tokens. Without either, each
         request gets its own stream (folded from its rid), so concurrent
-        sampled requests are never correlated."""
+        sampled requests are never correlated. ``deadline`` gives the
+        request that many SCHEDULER STEPS (from now) to retire; raises
+        :class:`QueueFull` when the admission queue is at ``max_queue``."""
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            raise QueueFull(
+                f"admission queue full ({len(self._queue)}/"
+                f"{self.max_queue}); retry after a drain")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1 or gen_len < 1:
             raise ValueError(
@@ -319,15 +450,35 @@ class ServeScheduler:
                 f"request needs {need} pages but the pool holds "
                 f"{self.allocator.capacity} (n_pages={self.n_pages}, "
                 f"page_size={self.page_size})")
+        if deadline is not None and deadline < 1:
+            raise ValueError(f"deadline must be >= 1 steps, got {deadline}")
         rid = self._next_rid
         if key is None and seed is None:
             key = jax.random.fold_in(jax.random.key(0), rid)
         elif key is None:
             key = jax.random.key(seed)
         self._next_rid += 1
-        self._queue.append(ServeRequest(rid=rid, prompt=prompt,
-                                        gen_len=gen_len, key=key))
+        self._queue.append(ServeRequest(
+            rid=rid, prompt=prompt, gen_len=gen_len, key=key,
+            deadline=None if deadline is None else self.steps + deadline))
         return rid
+
+    def cancel(self, rid: int) -> Optional[RequestResult]:
+        """Explicitly cancel a request. Queued: removed outright.
+        In-flight: evicted between blocks — its tokens so far come back
+        and its ledger meters exactly the steps it ran. Returns the
+        terminal ``status="cancelled"`` result, or None if ``rid`` is
+        unknown or already finished."""
+        if rid in self._results:
+            return None
+        for i, req in enumerate(self._queue):
+            if req.rid == rid:
+                self._queue.pop(i)
+                return self._fail_request(req, "cancelled")
+        for slot, req in enumerate(self._slot_req):
+            if req is not None and req.rid == rid:
+                return self._evict_slot(slot, "cancelled")
+        return None
 
     # ------------------------------------------------------ admission ----
     def _prefill_wave(self, reqs: List[ServeRequest]):
@@ -383,36 +534,74 @@ class ServeScheduler:
             self._prefill_caches = caches
         return logits, caches
 
+    @tags.host_boundary("preemption-resume replay: feeds the victim's "
+                        "already-fetched host tokens back one position at "
+                        "a time — host->device uploads on a cold path, "
+                        "never the steady-state decode loop")
+    def _replay_generated(self, req: ServeRequest, logits, caches):
+        """Re-derive a preempted request's device state: feed its
+        already-generated tokens through the per-token serve step, one
+        position at a time — the exact computation the solo decode loop
+        runs, so the carried logits and cache rows come back bitwise and
+        the resumed stream continues where the evicted one stopped."""
+        step = serving.make_serve_step(self.adapter, self.n_clients,
+                                       self.seq_len)
+        pl = req.prompt.size
+        tok0 = np.asarray([[req.generated[0]]], np.int32)
+        prog, dt = serving.compiled_with_timing(
+            step, self.params, tok0, caches, pl)
+        self.compile_s += dt
+        for i, tok in enumerate(np.asarray(req.generated, np.int32)):
+            logits, caches = prog(self.params,
+                                  np.asarray([[tok]], np.int32),
+                                  caches, pl + i)
+        return logits, caches
+
     def _admit_wave(self, slots: List[int], reqs: List[ServeRequest]):
         """Prefill a wave of requests, allocate their pages, and install
         all their slot state with ONE compiled scatter — async dispatches
         only, no host sync. Prefill wire traffic is logged here per
-        request: prompt_len embedding uploads, no downlink."""
+        request: one embedding upload per prefilled position (prompt
+        only for fresh requests; prompt + replayed tokens for a resumed
+        one), no downlink."""
         w = len(reqs)
         prompt_len = reqs[0].prompt.size
+        gens = [int(r.generated.size) for r in reqs]
+        eff_len = prompt_len + gens[0]      # uniform: wave is width-1 when
+        assert all(g == gens[0] for g in gens)  # any prefix is non-empty
         pages = [self.allocator.alloc(paging.pages_needed(
             r.prompt.size + r.gen_len, self.page_size)) for r in reqs]
 
         logits, caches = self._prefill_wave(reqs)
+        if gens[0]:
+            logits, caches = self._replay_generated(reqs[0], logits, caches)
+            if w == 1:
+                self._prefill_caches = caches
         if self._logits_st is None:
             self._logits_st = jnp.zeros(
                 (self.max_batch, 1) + logits.shape[1:], logits.dtype)
 
         rows = jnp.asarray(np.stack([
-            paging.install_rows(p, prompt_len, self.page_size)
+            paging.install_rows(p, eff_len, self.page_size)
             for p in pages]))
         kd = np.stack([np.asarray(jax.random.key_data(r.key))
                        for r in reqs])
+        gen_rows = np.zeros((w, self.seq_len), np.int32)
+        for i, r in enumerate(reqs):
+            gen_rows[i, :r.generated.size] = r.generated
         fn = make_install_prog(self.adapter, self.seq_len)
         args = (self._caches_st, self._logits_st, self._t_st,
                 self._gen_pos_st, self._rem_st, self._keydata_st,
-                caches, logits, rows, np.asarray(slots, np.int32),
-                np.full(w, prompt_len, np.int32),
-                np.asarray([r.gen_len for r in reqs], np.int32), kd)
+                self._gen_buf_st, caches, logits, rows,
+                np.asarray(slots, np.int32),
+                np.full(w, eff_len, np.int32),
+                np.asarray([r.gen_len - g
+                            for r, g in zip(reqs, gens)], np.int32),
+                kd, gen_rows, np.asarray(gens, np.int32))
         prog, dt = serving.compiled_with_timing(fn, *args)
         self.compile_s += dt
         (self._caches_st, self._logits_st, self._t_st, self._gen_pos_st,
-         self._rem_st, self._keydata_st) = prog(*args)
+         self._rem_st, self._keydata_st, self._gen_buf_st) = prog(*args)
 
         for slot, req, page_ids in zip(slots, reqs, pages):
             self._tables[slot, :] = paging.ZERO_PAGE
@@ -420,43 +609,95 @@ class ServeScheduler:
             self._tables_dev = None
             self._slot_pages[slot] = page_ids
             self._slot_req[slot] = req
-            self._remaining[slot] = req.gen_len
+            self._remaining[slot] = req.gen_len - req.generated.size
             self._admitted_at[slot] = self.steps
-            self.transport.account_serve(batch=1, embed=self.embed_dim,
-                                         n_steps=req.prompt.size, n_gen=0,
-                                         ledger=req.ledger)
+            if req.first_admitted < 0:
+                req.first_admitted = self.steps
+            self.transport.account_serve(
+                batch=1, embed=self.embed_dim,
+                n_steps=req.prompt.size + req.generated.size, n_gen=0,
+                ledger=req.ledger)
+
+    def _expire_queue(self):
+        """Fail queued requests that can no longer meet their deadline
+        (an admitted request always retires in exactly ``remaining``
+        scheduler steps, so feasibility is checkable at admission)."""
+        i = 0
+        while i < len(self._queue):
+            req = self._queue[i]
+            needed = req.gen_len - req.generated.size
+            if (req.deadline is not None
+                    and self.steps + needed > req.deadline):
+                self._queue.pop(i)
+                self.deadline_misses += 1
+                self._fail_request(req, "deadline")
+            else:
+                i += 1
+
+    def _pick_victim(self) -> Optional[int]:
+        """Preemption victim: the occupied slot with the FEWEST tokens
+        remaining, among slots that produced at least one token since
+        (re-)admission — requiring progress makes preemption ping-pong
+        terminate (total remaining strictly decreases between evictions
+        of the same pair)."""
+        best, best_rem = None, None
+        for slot, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            ran = (req.gen_len - req.generated.size) - self._remaining[slot]
+            if ran <= 0:
+                continue
+            if best_rem is None or self._remaining[slot] < best_rem:
+                best, best_rem = slot, self._remaining[slot]
+        return best
 
     def _admit_free_slots(self):
         """FIFO wave admission: take the queue's head run of equal-length
         prompts that fits the free slots AND the page pool, prefill it as
         one batch and install it with one compiled scatter. The queue is
-        never reordered — if the head doesn't fit, nothing jumps it."""
+        never reordered — if the head doesn't fit, nothing jumps it.
+        With ``preempt=True`` a page-starved head may evict a victim
+        (see :meth:`_pick_victim`) instead of waiting."""
         while self._queue:
+            self._expire_queue()
+            if not self._queue:
+                return
             free = [s for s in range(self.max_batch)
                     if self._slot_req[s] is None]
             if not free:
                 return
             avail = self.allocator.available
             pl = self._queue[0].prompt.size
+            g0 = int(self._queue[0].generated.size)
             wave = []
             for req in self._queue:
                 need = paging.pages_needed(req.prompt.size + req.gen_len,
                                            self.page_size)
                 if (len(wave) == len(free) or req.prompt.size != pl
-                        or need > avail):
+                        or need > avail
+                        or int(req.generated.size) != g0
+                        or (g0 and wave)):
                     break
                 wave.append(req)
                 avail -= need
             if not wave:
-                # page-gated: wait for a retirement wave to free pages
+                # page-gated. Either preempt a victim to unblock the
+                # head, or wait for a retirement wave to free pages.
+                if self.preempt:
+                    victim = self._pick_victim()
+                    if victim is not None:
+                        self._preempt_slot(victim)
+                        continue
                 return
             del self._queue[:len(wave)]
             self._admit_wave(free[:len(wave)], wave)
 
     # ----------------------------------------------------- the engine ----
-    def _block_len(self) -> int:
+    def _block_len(self, budget: Optional[int] = None) -> int:
         occ = [s for s, r in enumerate(self._slot_req) if r is not None]
         m = int(min(self._remaining[s] for s in occ))
+        if budget is not None:
+            m = min(m, max(int(budget), 1))
         return 1 << (max(m, 1).bit_length() - 1)    # pow2 floor <= min rem
 
     def _device_tables(self):
@@ -468,13 +709,13 @@ class ServeScheduler:
         return self._tables_dev
 
     @tags.hot_loop
-    def _block_step(self):
+    def _block_step(self, budget: Optional[int] = None):
         """Run one compiled K-step decode block over all slots — one
         dispatch, zero host syncs."""
         n_occ = self.active
         if n_occ == 0:
             return
-        k = self._block_len()
+        k = self._block_len(budget)
         prog = self._block_progs.get(k)
         tables = self._device_tables()
         args = (self.params, tables, self._keydata_st, self._logits_st,
@@ -496,6 +737,103 @@ class ServeScheduler:
             if req is not None:
                 self._remaining[slot] -= k
 
+    # ---------------------------------------------------- slot teardown --
+    @tags.host_boundary("eviction fetch: one device->host transfer pulls "
+                        "the slot's generated-so-far tokens and its "
+                        "logits-health flag — preempt/cancel/poison paths "
+                        "only, never the hot loop")
+    def _fetch_slot(self, slot: int):
+        """(tokens generated so far, logits finite?) for one slot."""
+        req = self._slot_req[slot]
+        total = (req.gen_len - req.generated.size) - self._remaining[slot]
+        total += req.generated.size
+        toks = np.asarray(self._gen_buf_st[slot])[:int(total)]
+        finite = True
+        if self._logits_st is not None:
+            finite = bool(np.isfinite(np.asarray(
+                self._logits_st[slot], np.float32)).all())
+        self.host_transfers += 1
+        return toks.astype(np.int32), finite
+
+    def _scrub_pages(self, page_ids) -> None:
+        """Zero a poisoned request's pages (and the trash page) in every
+        pooled leaf before they can be reallocated. Ordinary stale bytes
+        sit behind the causal mask and contribute exactly 0.0; NaN does
+        not (0·NaN = NaN), so poison must not outlive its tenancy."""
+        pages = jnp.asarray(np.concatenate(
+            [np.asarray(page_ids, np.int32),
+             np.asarray([paging.TRASH_PAGE], np.int32)]))
+        self._caches_st = jax.tree.map(
+            lambda st, plan: (st.at[:, pages].set(jnp.zeros(
+                (), st.dtype)) if plan.pooled else st),
+            self._caches_st, self._plans)
+
+    def _release_slot(self, slot: int, *, scrub: bool) -> None:
+        """Return a slot's pages to the pool and deactivate its device
+        row (``rem=0`` — otherwise the freed slot would keep decoding
+        and scribble on the ZERO page via its reset table)."""
+        if scrub:
+            self._scrub_pages(self._slot_pages[slot])
+        self.allocator.free_(self._slot_pages[slot])
+        self._slot_pages[slot] = None
+        self._tables[slot, :] = paging.ZERO_PAGE
+        self._tables_dev = None
+        self._slot_req[slot] = None
+        self._remaining[slot] = 0
+        self._rem_st = self._rem_st.at[slot].set(0)
+
+    def _fail_request(self, req: ServeRequest, status: str
+                      ) -> RequestResult:
+        res = RequestResult(
+            rid=req.rid, tokens=np.asarray(req.generated, np.int32),
+            ledger=req.ledger, prompt_len=int(req.prompt.size),
+            admitted_at=int(req.first_admitted), finished_at=self.steps,
+            status=status, preemptions=req.preemptions)
+        self._results[req.rid] = res
+        return res
+
+    def _evict_slot(self, slot: int, status: str) -> RequestResult:
+        """Terminally evict an in-flight request (cancel / poison): meter
+        the generation steps that actually ran, free (and if poisoned,
+        scrub) its pages, record the partial result."""
+        req = self._slot_req[slot]
+        toks, finite = self._fetch_slot(slot)
+        ran = len(toks) - req.generated.size
+        if ran > 0:
+            self.transport.account_serve(batch=1, embed=self.embed_dim,
+                                         n_steps=ran, n_gen=ran,
+                                         ledger=req.ledger)
+        if not finite:
+            status = "poisoned"
+            self.poisoned += 1
+        self._release_slot(slot, scrub=not finite)
+        req.generated = toks
+        return self._fail_request(req, status)
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict a victim to free pages for the queue's head: fetch its
+        tokens so far, meter the evicted tenancy, and re-queue it (tail)
+        to re-prefill + replay later. A poisoned victim fails here
+        instead of being resumed (replaying NaN state is pointless)."""
+        req = self._slot_req[slot]
+        toks, finite = self._fetch_slot(slot)
+        ran = len(toks) - req.generated.size
+        if ran > 0:
+            self.transport.account_serve(batch=1, embed=self.embed_dim,
+                                         n_steps=ran, n_gen=ran,
+                                         ledger=req.ledger)
+        if not finite:
+            self.poisoned += 1
+            self._release_slot(slot, scrub=True)
+            req.generated = toks
+            self._fail_request(req, "poisoned")
+            return
+        self._release_slot(slot, scrub=False)
+        req.generated = toks
+        req.preemptions += 1
+        self.preemptions += 1
+        self._queue.append(req)
+
     @tags.host_boundary("once-per-wave retirement fetch: one batched "
                         "device->host transfer covers every slot that "
                         "finished in the last block — O(requests) syncs, "
@@ -504,57 +842,236 @@ class ServeScheduler:
         """Retire every slot that finished in the last block: ONE
         batched device→host fetch for all of them, generation wire
         accounted in one deferred call per request (byte-identical to
-        the per-step metering it replaces — see the module docstring)."""
+        the per-step metering it replaces — see the module docstring).
+        The same fetch carries each slot's logits-health flag: a
+        non-finite slot fails as ``status="poisoned"`` and its pages are
+        scrubbed before reuse."""
         done = [s for s, r in enumerate(self._slot_req)
                 if r is not None and self._remaining[s] <= 0]
         if not done:
             return
-        toks_all = np.asarray(self._gen_buf_st[jnp.asarray(
-            np.array(done, np.int32))])
+        done_idx = jnp.asarray(np.array(done, np.int32))
+        toks_all = np.asarray(self._gen_buf_st[done_idx])
+        fin_all = np.isfinite(np.asarray(
+            self._logits_st[done_idx], np.float32)).reshape(
+                len(done), -1).all(axis=1)
         self.host_transfers += 1
         for row, slot in enumerate(done):
             req = self._slot_req[slot]
+            ran = req.gen_len - req.generated.size
             self.transport.account_serve(batch=1, embed=self.embed_dim,
-                                         n_steps=req.gen_len,
-                                         n_gen=req.gen_len,
+                                         n_steps=ran, n_gen=ran,
                                          ledger=req.ledger)
+            finite = bool(fin_all[row])
+            if not finite:
+                self.poisoned += 1
             self._results[req.rid] = RequestResult(
                 rid=req.rid, tokens=toks_all[row, :req.gen_len],
                 ledger=req.ledger, prompt_len=req.prompt.size,
                 admitted_at=int(self._admitted_at[slot]),
-                finished_at=self.steps)
-            self.allocator.free_(self._slot_pages[slot])
-            self._slot_pages[slot] = None
-            self._tables[slot, :] = paging.ZERO_PAGE
-            self._tables_dev = None
-            self._slot_req[slot] = None
+                finished_at=self.steps,
+                status="ok" if finite else "poisoned",
+                preemptions=req.preemptions)
+            self._release_slot(slot, scrub=not finite)
 
     # ----------------------------------------------------------- drive ----
     @property
     def active(self) -> int:
         return sum(r is not None for r in self._slot_req)
 
-    def run(self) -> List[RequestResult]:
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def run(self, max_steps: Optional[int] = None) -> List[RequestResult]:
         """Drain the queue: admit into free slots (and free pages) as
         they open up mid-flight, run compiled decode blocks until every
-        submitted request is done. Returns THIS drain's results in rid
-        order (requests drained by an earlier ``run()`` stay retrievable
-        via ``results``); wall-clock minus compile is exposed as
-        ``last_run_s``."""
-        draining = sorted([r.rid for r in self._queue]
-                          + [r.rid for r in self._slot_req if r is not None])
+        submitted request is done. Returns the requests that reached a
+        terminal state DURING this call, in rid order (earlier drains
+        stay retrievable via ``results``); wall-clock minus compile is
+        exposed as ``last_run_s``.
+
+        ``max_steps`` bounds the scheduler steps executed this call
+        (blocks are shortened to land exactly on the bound) and returns
+        with work still in flight — the partial-drain hook that
+        :meth:`snapshot`, :meth:`cancel` and kill/resume tests interleave
+        with."""
+        before = set(self._results)
         tic = time.perf_counter()
         compile0 = self.compile_s
+        start = self.steps
         while self._queue or self.active:
+            budget = (None if max_steps is None
+                      else max_steps - (self.steps - start))
+            if budget is not None and budget <= 0:
+                break
             self._admit_free_slots()
-            self._block_step()
+            self._block_step(budget)
             self._retire_wave()
         jax.block_until_ready(self._gen_buf_st)
         self.last_run_s = (time.perf_counter() - tic
                            - (self.compile_s - compile0))
-        return [self._results[rid] for rid in draining]
+        return [self._results[rid]
+                for rid in sorted(set(self._results) - before)]
 
     @property
     def results(self) -> Dict[int, RequestResult]:
         """Every request this scheduler has ever drained, by rid."""
         return dict(self._results)
+
+    # ------------------------------------------------------ durability ----
+    def _req_meta(self, req: ServeRequest, *, remaining: int,
+                  admitted_at: int) -> dict:
+        return {
+            "rid": req.rid, "prompt": np.asarray(req.prompt).tolist(),
+            "gen_len": int(req.gen_len),
+            "key_data": np.asarray(
+                jax.random.key_data(req.key)).tolist(),
+            "deadline": req.deadline,
+            "generated": np.asarray(req.generated).tolist(),
+            "preemptions": int(req.preemptions),
+            "first_admitted": int(req.first_admitted),
+            "ledger": _ledger_rows(req.ledger),
+            "remaining": int(remaining),
+            "admitted_at": int(admitted_at),
+        }
+
+    @staticmethod
+    def _req_from_meta(d: dict) -> ServeRequest:
+        kd = jnp.asarray(np.asarray(d["key_data"], np.uint32))
+        return ServeRequest(
+            rid=int(d["rid"]),
+            prompt=np.asarray(d["prompt"], np.int32),
+            gen_len=int(d["gen_len"]),
+            key=jax.random.wrap_key_data(kd),
+            ledger=_ledger_from_rows(d["ledger"]),
+            deadline=d["deadline"],
+            generated=np.asarray(d["generated"], np.int32),
+            preemptions=int(d["preemptions"]),
+            first_admitted=int(d["first_admitted"]))
+
+    @tags.host_boundary("snapshot fetch: pulls the whole serve-plane "
+                        "device state (page pool, slot rows, gen buffers, "
+                        "key streams) to host for a durable checkpoint — "
+                        "a stop-the-world operation, never the hot loop")
+    def snapshot(self) -> SchedulerState:
+        """Capture the complete serve plane between blocks. The snapshot
+        is self-contained: restored via ``fed.serve(params, state=...)``
+        the scheduler continues the drain with bitwise-identical token
+        streams and byte-identical per-request ledgers."""
+        jax.block_until_ready(self._gen_buf_st)
+        flat: Dict[str, np.ndarray] = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self._caches_st)[0]:
+            flat[_leafkey("caches", path)] = np.asarray(leaf)
+        slot_arrays = {
+            "t": self._t_st, "gen_pos": self._gen_pos_st,
+            "rem": self._rem_st, "gen_buf": self._gen_buf_st,
+            "keydata": self._keydata_st, "tables": self._tables,
+        }
+        if self._logits_st is not None:
+            slot_arrays["logits"] = self._logits_st
+        for name, arr in slot_arrays.items():
+            flat[f"slot_{name}"] = np.asarray(arr)
+        meta = {
+            "config": {
+                "max_batch": self.max_batch, "seq_len": self.seq_len,
+                "n_clients": self.n_clients, "embed_dim": self.embed_dim,
+                "vocab_size": self.vocab_size,
+                "temperature": self.temperature,
+                "page_size": self.page_size, "n_pages": self.n_pages,
+                "max_queue": self.max_queue, "preempt": self.preempt,
+                "has_logits": self._logits_st is not None,
+            },
+            "allocator": self.allocator.snapshot(),
+            "slots": [None if req is None else self._req_meta(
+                req, remaining=int(self._remaining[s]),
+                admitted_at=int(self._admitted_at[s]))
+                for s, req in enumerate(self._slot_req)],
+            "slot_pages": [None if p is None else
+                           np.asarray(p).tolist()
+                           for p in self._slot_pages],
+            "queue": [self._req_meta(r, remaining=0, admitted_at=-1)
+                      for r in self._queue],
+            "results": [{
+                "rid": r.rid, "tokens": np.asarray(r.tokens).tolist(),
+                "ledger": _ledger_rows(r.ledger),
+                "prompt_len": int(r.prompt_len),
+                "admitted_at": int(r.admitted_at),
+                "finished_at": int(r.finished_at), "status": r.status,
+                "preemptions": int(r.preemptions),
+            } for r in self._results.values()],
+            "counters": {
+                "steps": self.steps, "next_rid": self._next_rid,
+                "generated_tokens": self.generated_tokens,
+                "host_transfers": self.host_transfers,
+                "preemptions": self.preemptions,
+                "deadline_misses": self.deadline_misses,
+                "poisoned": self.poisoned,
+            },
+        }
+        return SchedulerState(flat=flat, meta=meta)
+
+    @tags.host_boundary("checkpoint restore: rehydrates host-side queue/"
+                        "slot/result metadata and uploads the pooled "
+                        "caches once — runs before the first decode "
+                        "block, never inside it")
+    def _load_state(self, state: SchedulerState) -> None:
+        cfg = state.meta["config"]
+        for k in ("max_batch", "seq_len", "n_clients", "page_size",
+                  "n_pages"):
+            if int(cfg[k]) != int(getattr(self, k)):
+                raise ValueError(
+                    f"serve state was captured with {k}={cfg[k]}, this "
+                    f"scheduler has {getattr(self, k)} — construct via "
+                    "fed.serve(params, state=...) so the config matches")
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(
+            self._caches_st)
+        self._caches_st = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(state.flat[_leafkey("caches", p)],
+                                  dtype=leaf.dtype)
+                      for p, leaf in leaves])
+        self._t_st = jnp.asarray(state.flat["slot_t"])
+        self._gen_pos_st = jnp.asarray(state.flat["slot_gen_pos"])
+        self._rem_st = jnp.asarray(state.flat["slot_rem"])
+        self._gen_buf_st = jnp.asarray(state.flat["slot_gen_buf"])
+        self._keydata_st = jnp.asarray(state.flat["slot_keydata"])
+        # copy: the snapshot array may be a read-only npz view (or alias
+        # a live scheduler's table), and _tables is mutated in place
+        self._tables = np.array(state.flat["slot_tables"], np.int32)
+        self._tables_dev = None
+        if cfg["has_logits"]:
+            self._logits_st = jnp.asarray(state.flat["slot_logits"])
+        self.allocator = paging.PageAllocator.restore(
+            state.meta["allocator"])
+        self._slot_req = [None if d is None else self._req_from_meta(d)
+                          for d in state.meta["slots"]]
+        self._slot_pages = [None if p is None else
+                            np.asarray(p, np.int32)
+                            for p in state.meta["slot_pages"]]
+        self._remaining = np.zeros(self.max_batch, np.int64)
+        self._admitted_at = np.zeros(self.max_batch, np.int64)
+        for s, d in enumerate(state.meta["slots"]):
+            if d is not None:
+                self._remaining[s] = int(d["remaining"])
+                self._admitted_at[s] = int(d["admitted_at"])
+        self._queue = [self._req_from_meta(d)
+                       for d in state.meta["queue"]]
+        self._results = {}
+        for d in state.meta["results"]:
+            self._results[int(d["rid"])] = RequestResult(
+                rid=int(d["rid"]),
+                tokens=np.asarray(d["tokens"], np.int32),
+                ledger=_ledger_from_rows(d["ledger"]),
+                prompt_len=int(d["prompt_len"]),
+                admitted_at=int(d["admitted_at"]),
+                finished_at=int(d["finished_at"]),
+                status=d["status"], preemptions=int(d["preemptions"]))
+        c = state.meta["counters"]
+        self.steps = int(c["steps"])
+        self._next_rid = int(c["next_rid"])
+        self.generated_tokens = int(c["generated_tokens"])
+        self.host_transfers = int(c["host_transfers"])
+        self.preemptions = int(c["preemptions"])
+        self.deadline_misses = int(c["deadline_misses"])
+        self.poisoned = int(c["poisoned"])

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.checkpoint.io import load_tree, save_checkpoint
+from repro.checkpoint.io import atomic_write, load_tree, save_checkpoint
 from repro.configs.base import ModelConfig, VFLConfig
 from repro.configs.paper_mlp import PaperMLPConfig
 from repro.core import async_engine, cascade
@@ -77,6 +77,13 @@ class SessionState:
     # was taken mid-``run_population``, so the resumed wire run replays
     # the remaining rounds bitwise (see async_engine.AsyncPlaneState)
     async_state: Optional[async_engine.AsyncPlaneState] = None
+    # the serve plane's full mutable state (admission queue, slot/block
+    # tables, page-pool free list, gen buffers, per-request ledgers, RNG
+    # streams) — set when the checkpoint was taken mid-drain, so
+    # ``fed.serve(params, state=...)`` resumes the drain bitwise (a
+    # ``scheduler.SchedulerState``; typed Any to keep the scheduler
+    # import lazy)
+    serve_state: Optional[Any] = None
     # the free-form metadata the saver passed to ``fed.save`` (driver
     # knobs like batch/seed/schedule live here, not in the session)
     metadata: dict = dataclasses.field(default_factory=dict)
@@ -369,7 +376,9 @@ class Federation:
 
     def serve(self, params, *, max_batch: int = 4,
               temperature: float = 0.0, page_size: Optional[int] = None,
-              n_pages: Optional[int] = None):
+              n_pages: Optional[int] = None,
+              max_queue: Optional[int] = None, preempt: bool = False,
+              state: Optional[Any] = None):
         """A continuous-batching serve session over the split plane.
 
         Returns a :class:`repro.federation.scheduler.ServeScheduler`:
@@ -380,7 +389,15 @@ class Federation:
         ledger. Slot caches live in a shared page pool (``page_size``
         must divide ``seq_len``; ``n_pages`` caps pool memory and
         admission-gates requests on free pages when set below the
-        ``max_batch`` worst case)."""
+        ``max_batch`` worst case).
+
+        Failure policy: ``max_queue`` bounds admission (``submit`` raises
+        ``QueueFull`` past it) and ``preempt=True`` lets a page-starved
+        queue head evict the in-flight request with the fewest tokens
+        remaining (bitwise-exact resume). Pass a restored
+        ``SessionState.serve_state`` as ``state`` to resume a mid-drain
+        snapshot exactly — the scheduler's shape/pool config then comes
+        from the snapshot, not from the keyword defaults."""
         from repro.federation.scheduler import ServeScheduler
         if self.model_cfg is None:
             raise ValueError(
@@ -388,18 +405,31 @@ class Federation:
                 "sessions have no serve plane)")
         if not is_engine_layout(params):
             params = self.params_from_global(params)
-        return ServeScheduler(
+        if state is not None:
+            cfg = state.meta["config"]
+            max_batch = int(cfg["max_batch"])
+            temperature = float(cfg["temperature"])
+            page_size = int(cfg["page_size"])
+            n_pages = int(cfg["n_pages"])
+            max_queue = cfg["max_queue"]
+            preempt = bool(cfg["preempt"])
+        srv = ServeScheduler(
             self.adapter, self.transport, params=params,
             n_clients=self.n_clients, seq_len=self.seq_len,
             embed_dim=self.model_cfg.d_model,
             vocab_size=self.model_cfg.vocab_size, max_batch=max_batch,
-            temperature=temperature, page_size=page_size, n_pages=n_pages)
+            temperature=temperature, page_size=page_size, n_pages=n_pages,
+            max_queue=max_queue, preempt=preempt)
+        if state is not None:
+            srv._load_state(state)
+        return srv
 
     # ------------------------------------------------- checkpoint plane ---
     def save(self, path: str, params, *, step: int = 0,
              opt_state: Optional[Any] = None,
              ledger: Optional[Ledger] = None, dp_releases: int = 0,
              async_state: Optional[async_engine.AsyncPlaneState] = None,
+             serve_state: Optional[Any] = None,
              metadata: Optional[dict] = None) -> str:
         """Party-scoped checkpoint: one directory per party + session state.
 
@@ -415,6 +445,10 @@ class Federation:
               async_plane/     the population engine's table/delay/clock
                                state (optional — mid-``run_population``
                                checkpoints; makes the resume bitwise)
+              serve_plane/     the serve scheduler's full state (optional
+                               — mid-drain checkpoints via
+                               ``srv.snapshot()``; makes the resumed
+                               drain's tokens and ledgers bitwise)
 
         The isolation is structural (:mod:`repro.federation.parties`):
         the server handle cannot address a client leaf, so its directory
@@ -449,6 +483,8 @@ class Federation:
                             step=step)
         if async_state is not None:
             async_state.save(os.path.join(path, "async_plane"))
+        if serve_state is not None:
+            serve_state.save(os.path.join(path, "serve_plane"))
 
         ledger = ledger if ledger is not None else Ledger()
         eps, delta = self.transport.privacy_spent(dp_releases)
@@ -468,10 +504,13 @@ class Federation:
             "dp_releases": int(dp_releases),
             "dp_spent": [eps if math.isfinite(eps) else None, delta],
             "async_plane": async_state is not None,
+            "serve_plane": serve_state is not None,
             "metadata": metadata or {},
         }
-        with open(os.path.join(path, SESSION_MANIFEST), "w") as f:
-            json.dump(manifest, f, indent=2)
+        # atomic + last: a session.json on disk always certifies complete
+        # party/plane directories next to it
+        atomic_write(os.path.join(path, SESSION_MANIFEST),
+                     lambda f: json.dump(manifest, f, indent=2), mode="w")
         return path
 
     @classmethod
@@ -525,12 +564,17 @@ class Federation:
         if manifest.get("async_plane"):
             async_state = async_engine.AsyncPlaneState.load(
                 os.path.join(path, "async_plane"))
+        serve_state = None
+        if manifest.get("serve_plane"):
+            from repro.federation.scheduler import SchedulerState
+            serve_state = SchedulerState.load(
+                os.path.join(path, "serve_plane"))
 
         state = SessionState(
             step=manifest["step"], opt_state=opt_state,
             ledger=Ledger.from_counts(manifest["ledger_counts"]),
             dp_releases=manifest["dp_releases"],
-            async_state=async_state,
+            async_state=async_state, serve_state=serve_state,
             metadata=manifest.get("metadata", {}))
         return fed, params, state
 

@@ -45,14 +45,20 @@ def _splittable(cfg) -> bool:
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 16,
           gen_len: int = 16, use_reduced: bool = True, seed: int = 0,
           temperature: float = 0.0, n_clients: int = 0,
-          continuous: bool = False, max_batch: int = 4) -> dict:
+          continuous: bool = False, max_batch: int = 4,
+          max_queue: int = None, preempt: bool = False,
+          n_pages: int = None, deadline: int = None) -> dict:
     """``n_clients >= 1`` routes through the session's split serve plane
     (falling back to the global path for families that cannot split);
     ``n_clients=0`` is the pre-session global decode, bit-identical to
     the split path on replicated client tables. ``continuous=True``
     serves ``batch`` independent requests through the continuous-batching
     scheduler (``fed.serve``) over ``max_batch`` slots instead of one
-    fused batch."""
+    fused batch — with the failure policy exposed: ``max_queue`` bounds
+    admission (the driver drains on :class:`QueueFull` and retries),
+    ``preempt``/``n_pages`` enable page-pool preemption under memory
+    pressure, and ``deadline`` gives every request that many scheduler
+    steps to retire (expired requests come back ``status="deadline"``)."""
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg, remat=False)
@@ -63,7 +69,9 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 16,
                                      gen_len=gen_len, seed=seed,
                                      temperature=temperature,
                                      n_clients=n_clients,
-                                     max_batch=max_batch)
+                                     max_batch=max_batch,
+                                     max_queue=max_queue, preempt=preempt,
+                                     n_pages=n_pages, deadline=deadline)
         return _serve_federated(arch, cfg, batch=batch,
                                 prompt_len=prompt_len, gen_len=gen_len,
                                 seed=seed, temperature=temperature,
@@ -122,11 +130,15 @@ def _serve_federated(arch: str, cfg, *, batch: int, prompt_len: int,
 
 def _serve_continuous(arch: str, cfg, *, batch: int, prompt_len: int,
                       gen_len: int, seed: int, temperature: float,
-                      n_clients: int, max_batch: int) -> dict:
+                      n_clients: int, max_batch: int,
+                      max_queue: int = None, preempt: bool = False,
+                      n_pages: int = None, deadline: int = None) -> dict:
+    from repro.federation import QueueFull
     fed, key, params = _build_session(cfg, n_clients=n_clients,
                                       prompt_len=prompt_len,
                                       gen_len=gen_len, seed=seed)
-    srv = fed.serve(params, max_batch=max_batch, temperature=temperature)
+    srv = fed.serve(params, max_batch=max_batch, temperature=temperature,
+                    max_queue=max_queue, preempt=preempt, n_pages=n_pages)
     # draw every request's prompt in one batched device op and fetch the
     # whole (batch, prompt_len) block with a single transfer — same
     # per-request fold_in streams as drawing them one by one
@@ -134,11 +146,27 @@ def _serve_continuous(arch: str, cfg, *, batch: int, prompt_len: int,
         lambda i: jax.random.randint(jax.random.fold_in(key, 1000 + i),
                                      (prompt_len,), 0, cfg.vocab_size))(
                                          jnp.arange(batch)))
+    queue_retries = 0
     for i in range(batch):
-        srv.submit(prompts[i], gen_len, key=jax.random.fold_in(key, i))
-    results = srv.run()
+        while True:
+            try:
+                srv.submit(prompts[i], gen_len,
+                           key=jax.random.fold_in(key, i),
+                           deadline=deadline)
+                break
+            except QueueFull:
+                # bounded admission is recoverable by design: drain a
+                # block, then offer the request again
+                queue_retries += 1
+                srv.run(max_steps=1)
+    srv.run()
+    results = [srv.results[rid] for rid in sorted(srv.results)]
     assert len(results) == batch
-    total_tokens = sum(r.tokens.size for r in results)
+    ok = [r for r in results if r.status == "ok"]
+    total_tokens = sum(r.tokens.size for r in ok)
+    statuses = {}
+    for r in results:
+        statuses[r.status] = statuses.get(r.status, 0) + 1
     return {
         "arch": arch, "batch": batch, "mode": "continuous",
         "clients": n_clients, "slots": max_batch,
@@ -147,9 +175,13 @@ def _serve_continuous(arch: str, cfg, *, batch: int, prompt_len: int,
         "compile_s": round(srv.compile_s, 2),
         "decode_tok_per_s": round(total_tokens / max(srv.last_run_s, 1e-9),
                                   1),
+        "statuses": statuses,
+        "preemptions": srv.preemptions,
+        "deadline_misses": srv.deadline_misses,
+        "queue_retries": queue_retries,
         "wire_bytes": sum(r.wire_bytes for r in results),
         "wire_has_gradients": any(r.transmits_gradients for r in results),
-        "sample_output": results[0].tokens[:8].tolist(),
+        "sample_output": (ok[0] if ok else results[0]).tokens[:8].tolist(),
     }
 
 
@@ -227,6 +259,12 @@ def main():
     # continuous batching: drain --batch requests through --max-batch slots
     ap.add_argument("--continuous", action="store_true")
     ap.add_argument("--max-batch", type=int, default=4)
+    # failure policy (continuous path only): bounded admission, page-pool
+    # preemption, and a per-request step deadline
+    ap.add_argument("--max-queue", type=int, default=None)
+    ap.add_argument("--preempt", action="store_true")
+    ap.add_argument("--n-pages", type=int, default=None)
+    ap.add_argument("--deadline", type=int, default=None)
     args = ap.parse_args()
     print(json.dumps(serve(args.arch, batch=args.batch,
                            prompt_len=args.prompt_len, gen_len=args.gen_len,
@@ -234,7 +272,11 @@ def main():
                            use_reduced=args.reduced,
                            n_clients=args.clients,
                            continuous=args.continuous,
-                           max_batch=args.max_batch), indent=2))
+                           max_batch=args.max_batch,
+                           max_queue=args.max_queue,
+                           preempt=args.preempt,
+                           n_pages=args.n_pages,
+                           deadline=args.deadline), indent=2))
 
 
 if __name__ == "__main__":

@@ -93,6 +93,15 @@ class LoopbackBackend:
         self._outbox.append(buf)
         return len(buf)
 
+    def send_bytes(self, buf: bytes) -> int:
+        """Raw-frame transmit (the :class:`~repro.wire.faults.ChaosBackend`
+        hook): queue already-framed — possibly deliberately damaged —
+        bytes for the peer."""
+        if not self._open:
+            raise WireClosed("send on a closed loopback endpoint")
+        self._outbox.append(buf)
+        return len(buf)
+
     @tags.host_boundary("decodes host-side frame bytes back into arrays; "
                         "blocks the host loop, never a trace")
     def recv(self, timeout: Optional[float] = None
@@ -116,25 +125,76 @@ class LoopbackBackend:
 # =============================================================== socket ====
 
 class SocketBackend:
-    """Length-prefixed frames over a connected TCP stream."""
+    """Length-prefixed frames over a connected TCP stream.
+
+    Constructed via :meth:`connect` with ``self_heal=True`` the backend
+    remembers its dial target and, when the stream dies mid-``send`` /
+    mid-``recv``, re-dials it with exponential backoff before giving up —
+    a worker survives the engine dropping and re-accepting its
+    connection (or an engine restart on the same port) instead of dying
+    with the first broken pipe. Accepted (listener-side) backends have no
+    dial target and always fail fast."""
 
     def __init__(self, sock: _socket.socket) -> None:
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self._sock = sock
+        self._peer: Optional[Tuple[str, int]] = None
+        self._heal_attempts = 0
+        self._heal_delay_s = 0.0
+        self.reconnects = 0         # successful self-heals (observability)
 
     @classmethod
     def connect(cls, host: str, port: int, *, retries: int = 100,
-                delay_s: float = 0.1) -> "SocketBackend":
+                delay_s: float = 0.1, self_heal: bool = False,
+                heal_attempts: int = 5,
+                heal_delay_s: float = 0.05) -> "SocketBackend":
         """Dial the engine's listener, retrying while it comes up (the
-        subprocess child usually races the parent's ``accept``)."""
+        subprocess child usually races the parent's ``accept``).
+
+        ``self_heal=True`` arms mid-stream reconnect: a ``WireClosed``
+        during ``send``/``recv`` triggers up to ``heal_attempts`` re-dials
+        with exponential backoff starting at ``heal_delay_s``."""
         last: Optional[Exception] = None
         for _ in range(retries):
             try:
-                return cls(_socket.create_connection((host, port)))
+                be = cls(_socket.create_connection((host, port)))
+                if self_heal:
+                    be._peer = (host, port)
+                    be._heal_attempts = heal_attempts
+                    be._heal_delay_s = heal_delay_s
+                return be
             except OSError as e:  # pragma: no cover - timing dependent
                 last = e
                 time.sleep(delay_s)
         raise WireClosed(f"could not connect to {host}:{port}: {last}")
+
+    def _reconnect(self, cause: Exception) -> None:
+        """Re-dial the remembered peer with exponential backoff; raises
+        ``WireClosed`` (chained to ``cause``) once the budget is spent."""
+        if self._peer is None:
+            raise cause
+        host, port = self._peer
+        try:
+            self._sock.close()
+        except OSError:  # pragma: no cover - already torn down
+            pass
+        delay = self._heal_delay_s
+        last: Exception = cause
+        for _ in range(self._heal_attempts):
+            try:
+                sock = _socket.create_connection((host, port))
+                sock.setsockopt(_socket.IPPROTO_TCP,
+                                _socket.TCP_NODELAY, 1)
+                self._sock = sock
+                self.reconnects += 1
+                return
+            except OSError as e:
+                last = e
+                time.sleep(delay)
+                delay *= 2
+        raise WireClosed(
+            f"could not re-dial {host}:{port} after "
+            f"{self._heal_attempts} attempts: {last}") from cause
 
     @tags.wire("up", accounted_by="Transport.account_wire", kind="frame",
                reason="TCP uplink frames: the length-prefixed bytes are "
@@ -149,6 +209,23 @@ class SocketBackend:
         try:
             self._sock.sendall(buf)
         except OSError as e:
+            self._reconnect(WireClosed(f"peer gone during send: {e}"))
+            # healed: the frame may have been torn mid-stream — resend it
+            # whole on the fresh connection (the far side reads a clean
+            # frame; the torn prefix died with the old socket)
+            try:
+                self._sock.sendall(buf)
+            except OSError as e2:  # pragma: no cover - peer flapping
+                raise WireClosed(f"peer gone during resend: {e2}") from e2
+        return len(buf)
+
+    def send_bytes(self, buf: bytes) -> int:
+        """Raw-frame transmit (the :class:`~repro.wire.faults.ChaosBackend`
+        hook): push already-framed — possibly deliberately damaged —
+        bytes down the stream."""
+        try:
+            self._sock.sendall(buf)
+        except OSError as e:
             raise WireClosed(f"peer gone during send: {e}") from e
         return len(buf)
 
@@ -158,7 +235,15 @@ class SocketBackend:
              ) -> Tuple[WireMessage, int]:
         self._sock.settimeout(DEFAULT_TIMEOUT_S if timeout is None
                               else timeout)
-        prefix = self._recv_exact(codec.FRAME_OVERHEAD)
+        try:
+            prefix = self._recv_exact(codec.FRAME_OVERHEAD)
+        except WireClosed as e:
+            # between frames: safe to heal and wait for the next one (a
+            # frame torn mid-read is NOT resumable — that stays fatal)
+            self._reconnect(e)
+            self._sock.settimeout(DEFAULT_TIMEOUT_S if timeout is None
+                                  else timeout)
+            prefix = self._recv_exact(codec.FRAME_OVERHEAD)
         body = self._recv_exact(codec.unframe_length(prefix))
         return codec.decode(body), len(prefix) + len(body)
 

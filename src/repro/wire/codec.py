@@ -20,15 +20,19 @@ transport get a fixed 8-byte length prefix (:func:`frame`); the prefix is
 part of the measured wire cost, so ``LoopbackBackend`` and
 ``SocketBackend`` report identical per-message byte counts.
 
-A version bump is a hard protocol break: :func:`decode` rejects any
-frame whose version differs from :data:`WIRE_VERSION` instead of
-guessing at field layouts.
+Version 2 adds a CRC32 of the payload body to the header, so a frame
+bitten by a faulty transport (bit flip, truncation) raises a typed
+:class:`FrameCorruption` instead of decoding garbage arrays. Version 1
+frames (no checksum) stay readable — the bump is backward-compatible on
+the read side. Any OTHER version is still a hard protocol break:
+:func:`decode` rejects it instead of guessing at field layouts.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import struct
+import zlib
 from typing import Any, Dict, Tuple
 
 import jax
@@ -36,16 +40,24 @@ import numpy as np
 
 from repro.checkpoint.io import decode_array, encode_array
 
-WIRE_VERSION = 1
+WIRE_VERSION = 2
+_READABLE_VERSIONS = (1, 2)         # v1 = pre-checksum frames
 _MAGIC = b"VFLW"
 _HEAD = struct.Struct("!4sHI")      # magic, version, header length
 _LENGTH = struct.Struct("!Q")       # stream frame prefix
 FRAME_OVERHEAD = _LENGTH.size       # beyond len(encode(msg))
 
+
+class FrameCorruption(ValueError):
+    """A frame failed its integrity checks (truncated body, CRC32
+    mismatch, or an unparseable header) — the bytes are damaged, not
+    merely foreign."""
+
 # the §V data plane (metered in the privacy ledger) vs scheduler/worker
-# bookkeeping (metered separately as control bytes, never in the ledger)
+# bookkeeping (metered separately as control bytes, never in the ledger);
+# ping/pong is the liveness heartbeat — an empty control round-trip
 DATA_TAGS = ("emb", "loss")
-CONTROL_TAGS = ("act", "skip", "collect", "params", "stop")
+CONTROL_TAGS = ("act", "skip", "collect", "params", "stop", "ping", "pong")
 
 
 @dataclasses.dataclass
@@ -69,32 +81,55 @@ def encode(msg: WireMessage) -> bytes:
     # the TRUE shape from `arrays` (scalar losses must stay scalars)
     enc = {k: encode_array(np.ascontiguousarray(v))
            for k, v in arrays.items()}
+    body = b"".join(enc[k].tobytes() for k in names)
     header = {
         "v": WIRE_VERSION, "tag": msg.tag, "sender": msg.sender,
         "round": int(msg.round), "meta": msg.meta,
+        "crc": zlib.crc32(body),
         "leaves": [[k, list(arrays[k].shape), str(arrays[k].dtype),
                     str(enc[k].dtype)] for k in names],
     }
     hb = json.dumps(header, sort_keys=True,
                     separators=(",", ":")).encode("utf-8")
-    body = b"".join(enc[k].tobytes() for k in names)
     return _HEAD.pack(_MAGIC, WIRE_VERSION, len(hb)) + hb + body
 
 
 def decode(buf: bytes) -> WireMessage:
-    """Inverse of :func:`encode`; rejects foreign/forward-version frames."""
+    """Inverse of :func:`encode`.
+
+    Rejects foreign/forward-version frames with ``ValueError``; raises
+    :class:`FrameCorruption` for frames that claim a readable version but
+    fail their integrity checks (short buffer, CRC32 mismatch, broken
+    header JSON)."""
     if len(buf) < _HEAD.size:
-        raise ValueError(f"truncated wire frame ({len(buf)} bytes)")
+        raise FrameCorruption(f"truncated wire frame ({len(buf)} bytes)")
     magic, version, hlen = _HEAD.unpack_from(buf, 0)
     if magic != _MAGIC:
         raise ValueError(f"not a wire frame (magic {magic!r})")
-    if version != WIRE_VERSION:
+    if version not in _READABLE_VERSIONS:
         raise ValueError(
-            f"wire protocol version {version} != {WIRE_VERSION}; "
-            "refusing to guess at the frame layout")
+            f"wire protocol version {version} not in "
+            f"{_READABLE_VERSIONS}; refusing to guess at the frame layout")
     off = _HEAD.size
-    header = json.loads(buf[off:off + hlen].decode("utf-8"))
+    if len(buf) < off + hlen:
+        raise FrameCorruption(
+            f"truncated wire frame: header claims {hlen} bytes, "
+            f"{len(buf) - off} present")
+    try:
+        header = json.loads(buf[off:off + hlen].decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise FrameCorruption(f"unparseable frame header: {e}") from e
     off += hlen
+    body = buf[off:]
+    need = sum(int(np.prod(shape, dtype=np.int64))
+               * np.dtype(wire_dtype).itemsize
+               for _, shape, _, wire_dtype in header["leaves"])
+    if len(body) < need:
+        raise FrameCorruption(
+            f"truncated wire frame body: {len(body)}/{need} payload bytes")
+    if version >= 2 and zlib.crc32(body[:need]) != header["crc"]:
+        raise FrameCorruption(
+            "frame payload CRC32 mismatch (corrupted in transit)")
     payload: Dict[str, np.ndarray] = {}
     for name, shape, dtype, wire_dtype in header["leaves"]:
         count = int(np.prod(shape, dtype=np.int64))

@@ -10,7 +10,16 @@ and speaks the population engine's message protocol over any
     skip     engine -> client   round aborted (drop / straggler) — clear state
     collect  engine -> client   request the parameter tree
     params   client -> engine   the flattened parameter tree
+    ping     engine -> client   liveness probe (heartbeat)
+    pong     client -> engine   liveness reply (echoes the ping's nonce)
     stop     engine -> client   exit the serve loop
+
+A crashed worker restarts from the last party-scoped checkpoint:
+:meth:`ClientWorker.from_checkpoint` re-materializes its parameter row
+from the ``client_XX/`` directory a ``fed.save`` wrote, so a replacement
+process rejoins the population with exactly the state the checkpoint
+froze (any rounds since are lost — the engine's graceful-degradation
+path absorbs them as missed activations).
 
 The compute path is the SAME lane decomposition the in-process engine
 jits (``zoo.sample_directions`` → ``stack_lanes`` → batched
@@ -29,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -36,11 +46,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import tags
+from repro.checkpoint.io import load_tree
 from repro.configs.base import VFLConfig
 from repro.core import zoo
 from repro.core.adapters import ModelAdapter
 from repro.wire import codec
-from repro.wire.backend import WireBackend, WireTimeout
+from repro.wire.backend import WireBackend, WireClosed, WireTimeout
 from repro.wire.codec import WireMessage
 
 
@@ -126,6 +137,18 @@ class ClientWorker:
         self._pending: Optional[_Pending] = None
         self._stopped = False
 
+    @classmethod
+    def from_checkpoint(cls, adapter: ModelAdapter, vfl: VFLConfig,
+                        ckpt_path: str, index: int, x_m: Any,
+                        backend: WireBackend) -> "ClientWorker":
+        """Restart a crashed worker from a party-scoped ``fed.save``
+        directory: load ONLY this party's row (``client_XX/``) — the
+        restarted process never touches another party's leaves — and
+        rejoin the wire on ``backend``."""
+        tree, _, _ = load_tree(os.path.join(ckpt_path,
+                                            f"client_{index:02d}"))
+        return cls(adapter, vfl, tree, x_m, index, backend)
+
     # ------------------------------------------------------------ driving --
     def pump(self) -> int:
         """Process every queued message (loopback mode); returns how many
@@ -159,6 +182,10 @@ class ClientWorker:
             self.backend.send(WireMessage(
                 "params", "client", msg.round, {"party": self.index},
                 codec.flatten_tree(self.client_params)))
+        elif msg.tag == "ping":
+            self.backend.send(WireMessage(
+                "pong", "client", msg.round,
+                {"party": self.index, "nonce": msg.meta.get("nonce", 0)}))
         elif msg.tag == "stop":
             self._stopped = True
         else:  # pragma: no cover - protocol error
@@ -197,3 +224,22 @@ class ClientWorker:
             [pend.losses[i] for i in range(len(pend.losses))]))
         self.client_params = self._update(self.client_params, pend.u_stack,
                                           pend.phi, losses)
+
+
+# ------------------------------------------------------------ liveness ----
+
+def heartbeat(backend: WireBackend, *, nonce: int = 0,
+              timeout: Optional[float] = 1.0) -> bool:
+    """Engine-side liveness probe: send ``ping``, wait for the matching
+    ``pong``. Returns False — never raises — on a dead, hung, or
+    desynchronized peer, so callers can poll it from a recovery path.
+
+    Only safe BETWEEN protocol rounds (an in-flight round's frames would
+    be eaten as non-pong replies and dropped)."""
+    try:
+        backend.send(WireMessage("ping", "server", 0, {"nonce": nonce}))
+        msg, _ = backend.recv(timeout=timeout)
+        return bool(msg.tag == "pong"
+                    and msg.meta.get("nonce", None) == nonce)
+    except (WireClosed, WireTimeout, OSError, ValueError):
+        return False

@@ -1,4 +1,4 @@
-"""Worker process for the socket-backend parity test.
+"""Worker process for the socket-backend parity and chaos tests.
 
 Rebuilds the SAME party state the parent's loopback run uses — the
 param init is cross-process deterministic (path-crc32 keys in
@@ -6,9 +6,16 @@ param init is cross-process deterministic (path-crc32 keys in
 instead of shipping parameters out of band — then serves one client
 party over a :class:`SocketBackend` until the engine says stop.
 
-Usage: python _wire_socket_child.py <port> <party>
+Usage: python _wire_socket_child.py <port> <party> [--die-after-frames N]
+                                                   [--from-checkpoint DIR]
+
+``--die-after-frames N`` wraps the backend in a :class:`ChaosBackend`
+that ``kill -9``'s this process the moment it tries to SEND its Nth
+frame — the crash-mid-round fixture for the engine's declared-dropout
+path. ``--from-checkpoint DIR`` restarts the worker from a party-scoped
+``fed.save`` directory instead of materializing fresh params.
 """
-import sys
+import argparse
 
 import jax
 
@@ -17,22 +24,36 @@ from repro.configs.paper_mlp import PaperMLPConfig
 from repro.core.adapters import tabular_adapter
 from repro.data import make_classification, vertical_partition
 from repro.models import common, tabular
-from repro.wire import ClientWorker, SocketBackend
+from repro.wire import ChaosBackend, ChaosPlan, ClientWorker, SocketBackend
 
 
 def main():
-    port, party = int(sys.argv[1]), int(sys.argv[2])
+    ap = argparse.ArgumentParser()
+    ap.add_argument("port", type=int)
+    ap.add_argument("party", type=int)
+    ap.add_argument("--die-after-frames", type=int, default=0)
+    ap.add_argument("--from-checkpoint", default="")
+    args = ap.parse_args()
     cfg = PaperMLPConfig(n_features=32, n_classes=4, n_clients=4,
                          client_embed=16, server_embed=32)
     X, _ = make_classification(0, 256, cfg.n_features, cfg.n_classes)
     Xp = vertical_partition(X, cfg.n_clients)
-    params = common.materialize(tabular.param_specs(cfg), jax.random.key(0))
     vfl = VFLConfig(mu=1e-3, lr_server=0.05, lr_client=0.05, zoo_queries=2)
-    worker = ClientWorker(
-        tabular_adapter(cfg), vfl,
-        jax.tree.map(lambda a: a[party], params["clients"]),
-        Xp[party], party,
-        SocketBackend.connect("127.0.0.1", port))
+    backend = SocketBackend.connect("127.0.0.1", args.port)
+    if args.die_after_frames:
+        backend = ChaosBackend(
+            backend, ChaosPlan(kill_at_frame=args.die_after_frames))
+    if args.from_checkpoint:
+        worker = ClientWorker.from_checkpoint(
+            tabular_adapter(cfg), vfl, args.from_checkpoint, args.party,
+            Xp[args.party], backend)
+    else:
+        params = common.materialize(tabular.param_specs(cfg),
+                                    jax.random.key(0))
+        worker = ClientWorker(
+            tabular_adapter(cfg), vfl,
+            jax.tree.map(lambda a: a[args.party], params["clients"]),
+            Xp[args.party], args.party, backend)
     worker.serve()
     print("CHILD_OK", flush=True)
 

@@ -376,6 +376,213 @@ def test_small_pool_gates_admission_on_pages():
             np.zeros(5, np.int32), 7)            # 2 pages > capacity 1
 
 
+def test_preempted_requests_resume_bitwise():
+    """ISSUE acceptance: with preempt=True and a page-starved pool, a
+    victim is evicted mid-flight and later re-admitted via re-prefill +
+    token replay — its final tokens are BITWISE-equal to an unpreempted
+    solo decode with the same key (absolute-position key folding makes
+    the resumed stream identical), at sampling temperature."""
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 32)
+    params = fed.params_from_global(gp)
+    # capacity 6 pages; (4+12 -> 4 pages) + (4+2 -> 2 pages) fills the
+    # pool, the short request's early retirement strands the second long
+    # request behind a page-starved head -> preemption ping-pong
+    srv = fed.serve(params, max_batch=2, temperature=0.8, page_size=4,
+                    n_pages=8, preempt=True)
+    specs = [(4, 12), (4, 2), (4, 12)]
+    reqs = []
+    for i, (pl, gl) in enumerate(specs):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 50 + i), (pl,), 0, cfg.vocab_size))
+        k = jax.random.fold_in(key, 500 + i)
+        srv.submit(prompt, gl, key=k)
+        reqs.append((prompt, gl, k))
+    results = srv.run()
+    assert srv.preemptions >= 1                 # starvation really bit
+    assert sum(r.preemptions for r in results) == srv.preemptions
+    assert all(r.status == "ok" for r in results)
+    for (prompt, gl, k), res in zip(reqs, results):
+        solo = fed.decode(params, prompt[None], gen_len=gl,
+                          temperature=0.8, key=k)
+        np.testing.assert_array_equal(res.tokens, solo.tokens[0])
+        # a preempted tenancy pays REAL extra wire (re-prefill + replay):
+        # its ledger dominates the solo cost, never undercounts it
+        assert res.ledger.total_bytes >= solo.ledger.total_bytes
+    assert srv.allocator.in_use == 0
+
+
+def test_queue_full_is_typed_and_recoverable():
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 8)
+    from repro.federation.scheduler import QueueFull
+    srv = fed.serve(fed.params_from_global(gp), max_batch=1, max_queue=2)
+    srv.submit(np.zeros(4, np.int32), 3)
+    srv.submit(np.ones(4, np.int32), 3)
+    with pytest.raises(QueueFull, match="admission queue full"):
+        srv.submit(np.full(4, 2, np.int32), 3)
+    assert isinstance(QueueFull("x"), RuntimeError)
+    results = srv.run()                      # drain frees the queue bound
+    assert [r.status for r in results] == ["ok", "ok"]
+    assert srv.submit(np.full(4, 3, np.int32), 3) == 2   # admits again
+    (late,) = srv.run()
+    assert late.status == "ok"
+
+
+def test_deadline_miss_and_cancel_ledger_exact():
+    """A queued request that can no longer meet its deadline fails typed
+    (status="deadline") without hanging the drain; an in-flight cancel
+    returns the tokens generated so far with a ledger that meters EXACTLY
+    the steps that ran — byte-identical to a solo decode of that length."""
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 12)
+    params = fed.params_from_global(gp)
+    srv = fed.serve(params, max_batch=1, temperature=0.8)
+    prompt = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 60), (4,), 0, cfg.vocab_size))
+    k = jax.random.fold_in(key, 600)
+    a = srv.submit(prompt, 8, key=k)
+    # needs 6 steps but only 2 are allowed: infeasible from the start,
+    # and the single slot is busy with `a` anyway
+    b = srv.submit(np.zeros(4, np.int32), 6, deadline=2)
+    # generous deadline: meets it comfortably behind `a`
+    c = srv.submit(np.full(4, 3, np.int32), 3, deadline=100)
+
+    # partial drain, then cancel the in-flight request between blocks
+    srv.run(max_steps=4)
+    res_a = srv.cancel(a)
+    assert res_a.status == "cancelled" and res_a.rid == a
+    ran = res_a.tokens.size
+    assert 0 < ran < 8
+    solo = fed.decode(params, prompt[None], gen_len=ran,
+                      temperature=0.8, key=k)
+    np.testing.assert_array_equal(res_a.tokens, solo.tokens[0])
+    assert res_a.ledger.messages == solo.ledger.messages
+    # cancelling an unknown/finished rid is a no-op, not an error
+    assert srv.cancel(a) is None and srv.cancel(999) is None
+
+    srv.run()
+    # b expired at the FIRST admission pass (infeasibility is checkable
+    # up front), so its terminal result landed in the bounded run
+    assert srv.results[b].status == "deadline"
+    assert srv.results[b].tokens.size == 0   # expired in the queue
+    assert srv.results[c].status == "ok"
+    assert srv.deadline_misses == 1
+    assert srv.allocator.in_use == 0         # nothing leaked
+
+
+def test_serve_kill_mid_drain_resumes_bitwise(tmp_path):
+    """ISSUE acceptance: kill the process mid-drain (snapshot after a
+    bounded run), persist via fed.save(serve_state=...), restore in a
+    fresh Federation, and finish — every request's tokens, status AND
+    ordered ledger messages are bitwise-identical to an uninterrupted
+    drain."""
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 12)
+    params = fed.params_from_global(gp)
+    specs = [(4, 8), (3, 5), (6, 6), (2, 3)]
+
+    def submit_all(srv):
+        for i, (pl, gl) in enumerate(specs):
+            prompt = np.asarray(jax.random.randint(
+                jax.random.fold_in(key, 70 + i), (pl,), 0, cfg.vocab_size))
+            srv.submit(prompt, gl, key=jax.random.fold_in(key, 700 + i))
+
+    ref = fed.serve(params, max_batch=2, temperature=0.8)
+    submit_all(ref)
+    ref.run()
+
+    srv = fed.serve(params, max_batch=2, temperature=0.8)
+    submit_all(srv)
+    srv.run(max_steps=6)                     # "killed" with work in flight
+    assert srv.active > 0 or srv.pending > 0
+    path = fed.save(str(tmp_path / "ck"), params,
+                    serve_state=srv.snapshot())
+    del srv
+
+    fed2, params2, state = Federation.restore(path)
+    assert state.serve_state is not None
+    srv2 = fed2.serve(params2, state=state.serve_state)
+    srv2.run()
+
+    assert set(srv2.results) == set(ref.results)
+    for rid, want in ref.results.items():
+        got = srv2.results[rid]
+        np.testing.assert_array_equal(got.tokens, want.tokens)
+        assert got.status == want.status
+        assert got.ledger.messages == want.ledger.messages
+    assert srv2.allocator.in_use == 0
+
+
+def test_poisoned_request_isolated_and_pages_scrubbed():
+    """A request whose cache pages go non-finite (poisoned activations)
+    terminates as status="poisoned" instead of crashing the engine or
+    publishing NaN tokens as "ok" — and its pages are scrubbed before
+    reuse, so the NEXT tenant of the same pool decodes bitwise-clean
+    (0·NaN = NaN: stale poison would pierce the causal mask)."""
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 12)
+    params = fed.params_from_global(gp)
+    srv = fed.serve(params, max_batch=2, temperature=0.8)
+    prompt = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 80), (4,), 0, cfg.vocab_size))
+    a = srv.submit(prompt, 8, key=jax.random.fold_in(key, 800))
+    srv.run(max_steps=2)                     # in flight, tokens pending
+    # poison the slot's first cache page (prompt positions, inside the
+    # causal mask of every later decode step)
+    pg = int(srv._slot_pages[0][0])
+    srv._caches_st = jax.tree.map(
+        lambda st, plan: (st.at[:, pg].set(jnp.nan) if plan.pooled
+                          else st),
+        srv._caches_st, srv._plans)
+    (res_a,) = srv.run()
+    assert res_a.rid == a and res_a.status == "poisoned"
+    assert srv.poisoned == 1
+    assert srv.allocator.in_use == 0
+
+    # the engine SURVIVES: a fresh request over the scrubbed pages is
+    # bitwise-equal to its solo decode
+    k_b = jax.random.fold_in(key, 801)
+    prompt_b = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 81), (4,), 0, cfg.vocab_size))
+    srv.submit(prompt_b, 6, key=k_b)
+    (res_b,) = srv.run()
+    assert res_b.status == "ok"
+    solo = fed.decode(params, prompt_b[None], gen_len=6,
+                      temperature=0.8, key=k_b)
+    np.testing.assert_array_equal(res_b.tokens, solo.tokens[0])
+    assert res_b.ledger.messages == solo.ledger.messages
+
+
+def test_small_pool_churn_with_preemption_drains_clean():
+    """An undersized pool + preempt=True under mixed-length churn: every
+    request terminates "ok" with solo-bitwise tokens, the pool is empty
+    at the end, and peak usage never exceeded capacity — preemption adds
+    liveness, never corruption or leaks."""
+    cfg = tiny_dense()
+    fed, model, gp, key = _build(cfg, 16)
+    params = fed.params_from_global(gp)
+    srv = fed.serve(params, max_batch=2, temperature=0.8, page_size=4,
+                    n_pages=6, preempt=True)     # capacity: 4 pages
+    specs = [(4, 10), (4, 2), (4, 8), (2, 3), (4, 4)]
+    reqs = []
+    for i, (pl, gl) in enumerate(specs):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 90 + i), (pl,), 0, cfg.vocab_size))
+        k = jax.random.fold_in(key, 900 + i)
+        srv.submit(prompt, gl, key=k)
+        reqs.append((prompt, gl, k))
+    results = srv.run()
+    assert len(results) == len(specs)
+    assert all(r.status == "ok" for r in results)
+    for (prompt, gl, k), res in zip(reqs, results):
+        solo = fed.decode(params, prompt[None], gen_len=gl,
+                          temperature=0.8, key=k)
+        np.testing.assert_array_equal(res.tokens, solo.tokens[0])
+    assert srv.allocator.in_use == 0
+    assert srv.allocator.peak_in_use <= srv.allocator.capacity
+
+
 def test_sig_memo_skips_tree_reflatten():
     """The AOT-cache signature memoizes big containers: a repeated lookup
     with the same live params tree must not re-flatten it."""

@@ -81,6 +81,54 @@ def test_checkpoint_roundtrip(tmp_path):
     assert loaded["c"].dtype == jnp.int32
 
 
+def test_atomic_write_crash_preserves_target(tmp_path):
+    """A writer that dies mid-write leaves the PREVIOUS file intact and
+    no temp litter — never a torn file at the target path."""
+    from repro.checkpoint.io import atomic_write
+    target = os.path.join(tmp_path, "state.json")
+    atomic_write(target, lambda f: f.write("v1"), mode="w")
+
+    def torn(f):
+        f.write("v2 but only hal")
+        raise RuntimeError("power loss (simulated)")
+
+    with pytest.raises(RuntimeError, match="power loss"):
+        atomic_write(target, torn, mode="w")
+    with open(target) as f:
+        assert f.read() == "v1"
+    assert os.listdir(tmp_path) == ["state.json"]   # tmp file unlinked
+
+
+def test_checkpoint_survives_torn_write(tmp_path, monkeypatch):
+    """Regression: a process killed mid-``save_checkpoint`` (half an npz
+    written, then nothing) must leave the previous checkpoint loadable
+    bitwise — arrays are replaced atomically and the manifest last."""
+    from repro.checkpoint import io as ckpt_io
+    path = os.path.join(tmp_path, "ckpt")
+    v1 = {"a": {"b": jnp.arange(6, dtype=jnp.float32)},
+          "c": jnp.asarray([1, 2], jnp.int32)}
+    save_checkpoint(path, v1, step=1)
+
+    def torn_savez(f, **arrays):
+        f.write(b"PK\x03\x04 half an npz, then the lights went out")
+        raise KeyboardInterrupt("kill -9 (simulated)")
+
+    v2 = {"a": {"b": jnp.full((6,), 7.0, jnp.float32)},
+          "c": jnp.asarray([9, 9], jnp.int32)}
+    with monkeypatch.context() as m:
+        m.setattr(ckpt_io.np, "savez", torn_savez)
+        with pytest.raises(KeyboardInterrupt):
+            save_checkpoint(path, v2, step=2)
+
+    loaded, step = load_checkpoint(path, v1)
+    assert step == 1                       # the old checkpoint, complete
+    np.testing.assert_array_equal(np.asarray(loaded["a"]["b"]),
+                                  np.asarray(v1["a"]["b"]))
+    np.testing.assert_array_equal(np.asarray(loaded["c"]),
+                                  np.asarray(v1["c"]))
+    assert not [fn for fn in os.listdir(path) if fn.endswith(".tmp")]
+
+
 # ------------------------------------------------------------------ data --
 
 def test_vertical_partition_disjoint_and_complete():

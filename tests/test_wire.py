@@ -11,18 +11,30 @@ The ISSUE acceptance pairs covered here:
     formula surviving as a cross-check lower bound;
   * 20% dropout degrades convergence instead of hanging a round;
   * a mid-run kill + resume replays the identical schedule/RNG/fault
-    streams and lands bitwise on the straight-through run.
+    streams and lands bitwise on the straight-through run;
+  * damaged frames (bit flip, truncation) raise typed FrameCorruption —
+    and v1 pre-checksum frames stay readable;
+  * a worker ``kill -9``'d mid-round is declared dead and the population
+    finishes every round (graceful degradation, never a hang);
+  * a self-healing socket survives its peer dropping the connection;
+  * a crashed worker restarts from a party-scoped checkpoint.
 """
 import collections
+import contextlib
+import json
 import os
+import signal
 import subprocess
 import sys
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.checkpoint.io import save_checkpoint
 from repro.configs import VFLConfig
 from repro.configs.paper_mlp import PaperMLPConfig
 from repro.core import async_engine
@@ -33,8 +45,10 @@ from repro.core.privacy import Ledger
 from repro.data import make_classification, vertical_partition
 from repro.federation import Transport
 from repro.models import common, tabular
-from repro.wire import (FaultPlan, LoopbackBackend, WireMessage, accept,
-                        codec, listen)
+from repro.wire import (ChaosBackend, ChaosPlan, ClientWorker,
+                        DeliveryFailed, FaultPlan, FrameCorruption,
+                        LoopbackBackend, SocketBackend, WireMessage, accept,
+                        codec, heartbeat, listen)
 
 CFG = PaperMLPConfig(n_features=32, n_classes=4, n_clients=4,
                      client_embed=16, server_embed=32)
@@ -55,6 +69,25 @@ def _pop(setup, ec=EC, **kw):
     return async_engine.run_population(
         tabular_adapter(CFG), Transport("cascaded"), VFL, ec,
         params, Xp, y, **kw)
+
+
+@contextlib.contextmanager
+def _hard_timeout(seconds):
+    """HARD per-test deadline for the socket/reconnect tests: a deadlock
+    in the accept/heal dance fails THIS test with a TimeoutError instead
+    of wedging the whole pytest process until the session-level
+    faulthandler fires."""
+
+    def _fire(signum, frame):  # pragma: no cover - only on deadlock
+        raise TimeoutError(f"socket test exceeded {seconds}s hard timeout")
+
+    old_handler = signal.signal(signal.SIGALRM, _fire)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old_handler)
 
 
 # ================================================================ codec ====
@@ -319,3 +352,313 @@ def test_population_validation(setup):
                                 seed=99)
         async_engine.run_population(adapter, wire, VFL, EC, params, Xp, y,
                                     state=stale)
+
+
+# ================================================ frame integrity (v2) =====
+
+def _payload_msg(rnd=3):
+    return WireMessage("emb", "client", rnd, {"party": 1, "lane": 0},
+                       {"c": np.arange(24, dtype=np.float32).reshape(4, 6)})
+
+
+def test_codec_crc_detects_bit_flip():
+    """A single flipped payload bit raises typed FrameCorruption (a
+    ValueError subclass — legacy except clauses still catch it)."""
+    buf = codec.encode(_payload_msg())
+    flipped = buf[:-1] + bytes([buf[-1] ^ 0x01])
+    with pytest.raises(FrameCorruption, match="CRC32"):
+        codec.decode(flipped)
+    assert issubclass(FrameCorruption, ValueError)
+    # header damage is corruption too, not a foreign frame
+    hdr = bytearray(buf)
+    hdr[codec._HEAD.size] ^= 0x01          # first header byte: breaks JSON
+    with pytest.raises(FrameCorruption, match="header"):
+        codec.decode(bytes(hdr))
+
+
+def test_codec_detects_truncation():
+    buf = codec.encode(_payload_msg())
+    with pytest.raises(FrameCorruption, match="truncated"):
+        codec.decode(buf[:-3])             # short payload body
+    with pytest.raises(FrameCorruption, match="truncated"):
+        codec.decode(buf[:codec._HEAD.size + 4])   # short header
+    with pytest.raises(FrameCorruption, match="truncated"):
+        codec.decode(buf[:6])              # shorter than the fixed head
+
+
+def _as_v1(buf: bytes) -> bytes:
+    """Re-pack a v2 frame as the pre-checksum v1 layout."""
+    _, _, hlen = codec._HEAD.unpack_from(buf, 0)
+    header = json.loads(buf[codec._HEAD.size:codec._HEAD.size + hlen])
+    body = buf[codec._HEAD.size + hlen:]
+    del header["crc"]
+    header["v"] = 1
+    hb = json.dumps(header, sort_keys=True,
+                    separators=(",", ":")).encode("utf-8")
+    return codec._HEAD.pack(codec._MAGIC, 1, len(hb)) + hb + body
+
+
+def test_codec_still_reads_v1_frames():
+    """The CRC bump is backward-compatible on the read side: a v1 frame
+    (no checksum in the header) decodes exactly — and, lacking a
+    checksum, a corrupted v1 body decodes WITHOUT raising (the gap the
+    version bump closes)."""
+    msg = _payload_msg()
+    v1 = _as_v1(codec.encode(msg))
+    out = codec.decode(v1)
+    assert (out.tag, out.sender, out.round, out.meta) == (
+        msg.tag, msg.sender, msg.round, msg.meta)
+    np.testing.assert_array_equal(out.payload["c"], msg.payload["c"])
+    # same damage that test_codec_crc_detects_bit_flip catches on v2:
+    damaged = v1[:-1] + bytes([v1[-1] ^ 0x01])
+    bad = codec.decode(damaged)            # no checksum -> silent garbage
+    assert not np.array_equal(bad.payload["c"], msg.payload["c"])
+
+
+# ================================== typed delivery failures (FaultPlan) ====
+
+def test_delivery_failed_carries_attempt_history():
+    plan = FaultPlan(seed=7, party_drop=((2, 1.0),), max_retries=2,
+                     timeout_ms=10.0)
+    with pytest.raises(DeliveryFailed) as ei:
+        plan.require(5, 2, "up")
+    e = ei.value
+    assert (e.seed, e.round, e.party, e.direction) == (7, 5, 2, "up")
+    assert not e.delivery.ok and e.delivery.attempts == 3
+    trail = e.delivery.history
+    assert [a.attempt for a in trail] == [0, 1, 2]
+    assert all(a.dropped for a in trail)
+    # exponential backoff costs are part of the audit trail
+    assert [a.elapsed_ms for a in trail] == [10.0, 20.0, 40.0]
+    assert e.delivery.elapsed_ms == 70.0
+    assert "3 attempts" in str(e) and "party=2" in str(e)
+    # a clean delivery through the same plan does NOT raise
+    assert plan.require(5, 1, "up").ok
+
+
+def test_party_override_beats_global_knobs_both_directions():
+    """Per-party overrides take precedence over the population-wide
+    default in BOTH directions — a pinned-clean party never drops under
+    a hostile global rate, and a pinned-dead party always fails under a
+    clean one."""
+    clean2 = FaultPlan(seed=0, drop=0.99, party_drop=((2, 0.0),),
+                       max_retries=0)
+    assert clean2.drop_for(2) == 0.0 and clean2.drop_for(1) == 0.99
+    for t in range(50):
+        for d in ("up", "down"):
+            out = clean2.delivery(t, 2, d)
+            assert out.ok and out.attempts == 1
+    assert any(not clean2.delivery(t, 1, "up").ok for t in range(50))
+
+    dead2 = FaultPlan(seed=0, party_drop=((2, 1.0),), max_retries=0)
+    for d in ("up", "down"):
+        assert not dead2.delivery(0, 2, d).ok
+        with pytest.raises(DeliveryFailed):
+            dead2.require(0, 2, d)
+        assert dead2.delivery(0, 1, d).ok
+
+    lat = FaultPlan(seed=0, latency_ms=1.0, party_latency_ms=((3, 9.0),))
+    assert lat.latency_for(3) == 9.0 and lat.latency_for(0) == 1.0
+
+
+# ====================================================== chaos backend ======
+
+def test_chaos_backend_damages_real_wire_bytes():
+    """ChaosBackend corruption/truncation happens on the ACTUAL framed
+    bytes, after encoding — the receiving endpoint's decode raises typed
+    FrameCorruption, and the wire keeps working for later frames."""
+    a, b = LoopbackBackend.pair()
+    chaos = ChaosBackend(a, ChaosPlan(corrupt_at_frame=2,
+                                      truncate_at_frame=3))
+    for r in range(4):
+        chaos.send(_payload_msg(rnd=r))
+    msg, _ = b.recv()
+    assert msg.round == 0                  # frame 1: clean
+    with pytest.raises(FrameCorruption, match="CRC32"):
+        b.recv()                           # frame 2: bit-flipped payload
+    with pytest.raises(FrameCorruption, match="truncated"):
+        b.recv()                           # frame 3: cut to 8 bytes
+    msg, _ = b.recv()
+    assert msg.round == 3                  # frame 4: clean again
+    assert chaos.frames_sent == 4
+
+
+def test_chaos_backend_stalls_a_send():
+    a, b = LoopbackBackend.pair()
+    chaos = ChaosBackend(a, ChaosPlan(stall_at_frame=2, stall_s=0.15))
+    t0 = time.monotonic()
+    chaos.send(WireMessage("act", "server", 0))
+    fast = time.monotonic() - t0
+    t0 = time.monotonic()
+    chaos.send(WireMessage("act", "server", 1))
+    slow = time.monotonic() - t0
+    assert slow >= 0.15 > fast
+    for r in (0, 1):
+        msg, _ = b.recv()
+        assert msg.round == r              # stalled, not dropped
+
+
+# ================================================== liveness heartbeat =====
+
+def test_heartbeat_liveness_loopback(setup):
+    Xp, y, params = setup
+    eng, cli = LoopbackBackend.pair()
+    worker = ClientWorker(tabular_adapter(CFG), VFL,
+                          jax.tree.map(lambda a: a[0], params["clients"]),
+                          Xp[0], 0, cli)
+    # loopback peers are engine-pumped, so drive the round-trip manually
+    eng.send(WireMessage("ping", "server", 0, {"nonce": 41}))
+    assert worker.pump() == 1
+    msg, _ = eng.recv()
+    assert msg.tag == "pong" and msg.meta["nonce"] == 41
+    # heartbeat() against a silent peer reports dead — it never raises
+    assert heartbeat(eng, nonce=7, timeout=0.0) is False
+
+
+def test_heartbeat_over_live_socket_worker(setup):
+    """End-to-end liveness: after a full population run with
+    ``stop_workers=False`` the subprocess worker still answers pings;
+    after ``stop`` it reads as dead."""
+    child = os.path.join(os.path.dirname(__file__), "_wire_socket_child.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..",
+                                      "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    with _hard_timeout(240):
+        listener, port = listen()
+        proc = subprocess.Popen([sys.executable, child, str(port), "2"],
+                                env=env, stdout=subprocess.PIPE,
+                                stderr=subprocess.PIPE, text=True)
+        try:
+            chan = accept(listener, timeout=120.0)
+            pop = _pop(setup, channels={2: chan}, stop_workers=False,
+                       ledger=Ledger())
+            assert len(pop.losses) == EC.steps
+            # between rounds: the worker is idle and answers the probe
+            assert heartbeat(chan, nonce=99, timeout=30.0) is True
+            chan.send(WireMessage("stop", "server"))
+            out, err = proc.communicate(timeout=120)
+            assert proc.returncode == 0, f"stdout:{out}\nstderr:{err}"
+            # the peer is gone now: the probe reports dead, no exception
+            assert heartbeat(chan, nonce=100, timeout=2.0) is False
+        finally:
+            listener.close()
+            if proc.poll() is None:  # pragma: no cover - failure path
+                proc.kill()
+
+
+# ============================================= self-healing socket wire ====
+
+def test_socket_self_heal_reconnects_after_peer_drop():
+    """A ``self_heal=True`` socket survives its peer dropping the
+    connection between frames: the recv that hits the dead stream
+    re-dials with backoff and lands on the listener's next accept."""
+    with _hard_timeout(60):
+        listener, port = listen()
+        got = {}
+
+        def server():
+            be1 = accept(listener, timeout=30.0)
+            msg, _ = be1.recv(timeout=30.0)
+            got["before"] = msg.meta["n"]
+            be1.close()                    # drop the worker's connection
+            be2 = accept(listener, timeout=30.0)   # the heal lands here
+            be2.send(WireMessage("pong", "server", 0, {"nonce": 1}))
+            msg2, _ = be2.recv(timeout=30.0)
+            got["after"] = msg2.meta["n"]
+            be2.close()
+
+        th = threading.Thread(target=server, daemon=True)
+        th.start()
+        try:
+            cli = SocketBackend.connect("127.0.0.1", port, self_heal=True,
+                                        heal_attempts=20, heal_delay_s=0.05)
+            cli.send(WireMessage("ping", "client", 0, {"n": 1}))
+            msg, _ = cli.recv(timeout=30.0)    # peer died -> heal -> pong
+            assert msg.tag == "pong" and msg.meta["nonce"] == 1
+            cli.send(WireMessage("ping", "client", 0, {"n": 2}))
+            th.join(timeout=30.0)
+            assert not th.is_alive()
+            assert cli.reconnects == 1         # exactly one self-heal
+            assert got == {"before": 1, "after": 2}
+            cli.close()
+        finally:
+            listener.close()
+
+
+# ===================================== kill -9 a worker, finish the run ====
+
+def test_population_survives_worker_kill9(setup):
+    """ISSUE acceptance: party 2's subprocess is ``kill -9``'d mid-round
+    (ChaosPlan kill before its 2nd frame — inside its FIRST round's
+    (1+q)-lane embedding fan-out, after lane 0 already crossed the
+    wire). The engine declares the party dead after the wire error,
+    finishes EVERY round without hanging, keeps losses finite, and falls
+    back to the initial parameter row at collect time."""
+    child = os.path.join(os.path.dirname(__file__), "_wire_socket_child.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..",
+                                      "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    with _hard_timeout(240):
+        listener, port = listen()
+        proc = subprocess.Popen(
+            [sys.executable, child, str(port), "2",
+             "--die-after-frames", "2"],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True)
+        try:
+            chan = accept(listener, timeout=120.0)
+            pop = _pop(setup, channels={2: chan}, wire_timeout_s=30.0,
+                       ledger=Ledger())
+            out, err = proc.communicate(timeout=120)
+        finally:
+            listener.close()
+            if proc.poll() is None:  # pragma: no cover - failure path
+                proc.kill()
+    assert proc.returncode == 9            # os._exit(9): died mid-protocol
+    assert "CHILD_OK" not in out           # never reached a clean exit
+    assert len(pop.losses) == EC.steps     # every round completed
+    assert np.all(np.isfinite(pop.losses))
+    assert pop.stats["dead_parties"] == 1
+    assert pop.stats["uplink_drops"] > 0   # missed activations, not hangs
+    assert pop.stats["participation"] < 1.0
+    # collect fell back to the initial row for the dead party
+    Xp, y, params = setup
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(params["clients"]),
+            jax.tree_util.tree_leaves_with_path(pop.params["clients"])):
+        assert np.array_equal(np.asarray(a[2]), np.asarray(b[2])), pa
+
+
+# ======================================= worker restart from checkpoint ====
+
+def test_worker_restarts_from_checkpoint(setup, tmp_path):
+    """A replacement worker process re-materializes its party row from a
+    party-scoped checkpoint directory and speaks the protocol with
+    exactly the frozen parameters (it never reads another party's row)."""
+    Xp, y, params = setup
+    row = jax.tree.map(lambda a: np.asarray(a[2]), params["clients"])
+    save_checkpoint(str(tmp_path / "client_02"), row)
+
+    eng, cli = LoopbackBackend.pair()
+    worker = ClientWorker.from_checkpoint(
+        tabular_adapter(CFG), VFL, str(tmp_path), 2, Xp[2], cli)
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(row),
+            jax.tree_util.tree_leaves_with_path(worker.client_params)):
+        assert np.array_equal(a, np.asarray(b)), pa
+    # the restarted worker serves the protocol from the restored state
+    eng.send(WireMessage("collect", "server", 0))
+    assert worker.pump() == 1
+    msg, _ = eng.recv()
+    assert msg.tag == "params" and msg.meta["party"] == 2
+    restored = codec.unflatten_tree(msg.payload)
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(row),
+            jax.tree_util.tree_leaves_with_path(restored)):
+        assert np.array_equal(a, np.asarray(b)), pa
+    # a missing party directory is a hard error, not a silent fresh init
+    with pytest.raises(FileNotFoundError):
+        ClientWorker.from_checkpoint(
+            tabular_adapter(CFG), VFL, str(tmp_path), 3, Xp[3], cli)
